@@ -1,0 +1,157 @@
+"""Shared benchmark utilities: artifact loading, eval corpora, metric eval."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ALL_METRICS,
+    CLASSIFICATION_METRICS,
+    REGRESSION_METRICS,
+    accuracy,
+    balanced_indices,
+    batch_graphs,
+    build_graph,
+    predict,
+    qerror_summary,
+)
+from repro.core.flat_vector import featurize_flat_traces
+from repro.core.model import label_array
+from repro.dsps.generator import Trace, WorkloadGenerator
+from repro.launch import artifacts
+from repro.launch.train import CORPUS_SEED, SPLIT_SEED, main_corpus
+from repro.training.loop import predict_flat
+
+RESULTS_DIR = artifacts.path("results")
+
+
+def save_result(name: str, payload: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+
+
+def test_split_traces() -> List[Trace]:
+    """The held-out 10% of the main corpus (same permutation as training)."""
+    traces = main_corpus()
+    rng = np.random.default_rng(SPLIT_SEED)
+    perm = rng.permutation(len(traces))
+    n_tr = int(0.8 * len(traces))
+    n_va = int(0.1 * len(traces))
+    return [traces[i] for i in perm[n_tr + n_va :]]
+
+
+def graphs_of(traces: Sequence[Trace], transform=None):
+    singles = [build_graph(t.query, t.cluster, t.placement) for t in traces]
+    if transform:
+        singles = [transform(g) for g in singles]
+    return jax.tree_util.tree_map(jnp.asarray, batch_graphs(singles))
+
+
+def eval_costream(
+    traces: Sequence[Trace],
+    metrics: Sequence[str] = ALL_METRICS,
+    prefix: str = "main",
+    transform=None,
+    balance: bool = True,
+) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {}
+    g_all = graphs_of(traces, transform)
+    for metric in metrics:
+        name = f"{prefix}_{metric}"
+        if not artifacts.exists("costream", name):
+            out[metric] = {"missing": True}
+            continue
+        params, cfg = artifacts.load_cost_model(name)
+        y = label_array(traces, metric)
+        pred = predict(params, g_all, cfg)
+        if metric in REGRESSION_METRICS:
+            mask = y > 0  # failed runs have zero cost; the paper predicts costs
+            out[metric] = qerror_summary(y[mask], pred[mask])
+        else:
+            idx = (
+                balanced_indices(y.astype(int), np.random.default_rng(0))
+                if balance
+                else np.arange(len(y))
+            )
+            out[metric] = {"accuracy": accuracy(y[idx], pred[idx]), "n": int(len(idx))}
+    return out
+
+
+def eval_flat(
+    traces: Sequence[Trace],
+    metrics: Sequence[str] = ALL_METRICS,
+    balance: bool = True,
+) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {}
+    x = featurize_flat_traces(list(traces))
+    for metric in metrics:
+        name = f"flat_{metric}"
+        if not artifacts.exists("flat", name):
+            out[metric] = {"missing": True}
+            continue
+        params, cfg = artifacts.load_flat_model(name)
+        y = label_array(traces, metric)
+        pred = predict_flat(params, x, cfg.task)
+        if metric in REGRESSION_METRICS:
+            mask = y > 0
+            out[metric] = qerror_summary(y[mask], pred[mask])
+        else:
+            idx = (
+                balanced_indices(y.astype(int), np.random.default_rng(0))
+                if balance
+                else np.arange(len(y))
+            )
+            out[metric] = {"accuracy": accuracy(y[idx], pred[idx]), "n": int(len(idx))}
+    return out
+
+
+def load_placement_models(prefix: str = "main"):
+    models = {}
+    for metric in ("latency_p", "throughput", "success", "backpressure"):
+        name = f"{prefix}_{metric}"
+        if artifacts.exists("costream", name):
+            models[metric] = artifacts.load_cost_model(name)
+    return models
+
+
+class FlatRanker:
+    """Candidate ranking with the flat-vector baseline (Fig. 9's comparison)."""
+
+    def __init__(self):
+        self.models = {}
+        for metric in ("latency_p", "success", "backpressure"):
+            name = f"flat_{metric}"
+            if artifacts.exists("flat", name):
+                self.models[metric] = artifacts.load_flat_model(name)
+
+    def pick(self, query, cluster, candidates, target="latency_p"):
+        from repro.core.flat_vector import featurize_flat
+
+        x = np.stack([featurize_flat(query, cluster, p) for p in candidates])
+        feasible = np.ones(len(candidates), dtype=bool)
+        for m in ("success", "backpressure"):
+            if m in self.models:
+                params, cfg = self.models[m]
+                feasible &= predict_flat(params, x, cfg.task).astype(bool)
+        if not feasible.any():
+            feasible[:] = True
+        params, cfg = self.models[target]
+        scores = predict_flat(params, x, cfg.task)
+        masked = np.where(feasible, scores, np.inf)
+        return candidates[int(np.argmin(masked))]
+
+
+def fmt_table(rows: List[Dict], cols: List[str]) -> str:
+    widths = {c: max(len(c), max((len(str(r.get(c, ""))) for r in rows), default=0)) for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols)]
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(lines)

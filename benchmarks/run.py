@@ -1,0 +1,58 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only exp1,exp2,...]
+
+Prints each table and a final ``name,us_per_call,derived`` CSV summary; all
+payloads are also saved under artifacts/results/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only != "all" else None
+
+    from benchmarks import exp1_accuracy, exp2_placement, exp3456, exp7_ablations
+    from benchmarks import kernels_bench, roofline_report
+
+    stages = {
+        "exp1": exp1_accuracy.main,
+        "exp2": exp2_placement.main,
+        "exp3": exp3456.exp3_interpolation,
+        "exp4": exp3456.exp4_extrapolation,
+        "exp5": exp3456.exp5_unseen_patterns,
+        "exp6": exp3456.exp6_unseen_benchmarks,
+        "exp7": exp7_ablations.main,
+        "kernels": kernels_bench.main,
+        "roofline": lambda: (roofline_report.main("single"), roofline_report.main("multi")),
+    }
+    timings = []
+    failures = []
+    for name, fn in stages.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            timings.append((name, time.time() - t0, "ok"))
+        except Exception as e:
+            traceback.print_exc()
+            timings.append((name, time.time() - t0, f"FAIL:{type(e).__name__}"))
+            failures.append(name)
+
+    print("\nname,us_per_call,derived")
+    for name, secs, status in timings:
+        print(f"{name},{secs * 1e6:.0f},{status}")
+    if failures:
+        raise SystemExit(f"failed stages: {failures}")
+
+
+if __name__ == "__main__":
+    main()

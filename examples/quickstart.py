@@ -1,0 +1,42 @@
+"""Quickstart: generate a workload corpus, train a COSTREAM latency model,
+and predict the cost of an unseen placed query.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModelConfig, GNNConfig, predict, qerror_summary
+from repro.dsps import WorkloadGenerator
+from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
+
+
+def main():
+    # 1. benchmark corpus (paper SVI): random queries x hardware x placements,
+    #    labeled by the DSPS cost simulator
+    gen = WorkloadGenerator(seed=0)
+    traces = gen.corpus(1500)
+    print(f"corpus: {len(traces)} traces, "
+          f"{sum(t.labels.backpressure == 0 for t in traces)} backpressured, "
+          f"{sum(t.labels.success == 0 for t in traces)} failed")
+
+    # 2. train a processing-latency cost model (ensemble of 2 for speed)
+    ds = dataset_from_traces(traces, "latency_p")
+    train, val, test = split_dataset(ds)
+    cfg = CostModelConfig(metric="latency_p", n_ensemble=2, gnn=GNNConfig(hidden=48))
+    result = train_cost_model(
+        train, val, cfg, TrainConfig(epochs=10, batch_size=256, verbose=True)
+    )
+
+    # 3. zero-shot predictions on unseen placed queries
+    g = jax.tree_util.tree_map(jnp.asarray, test.graphs)
+    pred = predict(result.params, g, cfg)
+    print("\nq-error on held-out queries:", qerror_summary(test.labels, pred))
+    for i in range(3):
+        print(f"  query {i}: true {test.labels[i]:9.1f} ms   predicted {pred[i]:9.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

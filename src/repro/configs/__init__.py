@@ -1,0 +1,23 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from repro.configs.base import (
+    ARCHS,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    get_shape,
+    input_specs,
+    reduced,
+    cell_supported,
+)
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ShapeSpec",
+    "get_config",
+    "get_shape",
+    "input_specs",
+    "reduced",
+    "cell_supported",
+]

@@ -1,0 +1,26 @@
+"""RecurrentGemma-2B (Griffin): RG-LRU recurrent blocks + local attention in
+a 2:1 pattern, MQA, tied embeddings [arXiv:2402.19427]."""
+
+from repro.models.transformer import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=7680,
+        vocab=256000,
+        pattern=("rec", "rec", "local"),
+        n_groups=8,  # 24 layers ...
+        suffix=("rec", "rec"),  # ... + 2 = 26
+        window=2048,
+        rnn_width=2560,
+        conv_width=4,
+        ffn_kind="geglu",
+        tie_embeddings=True,
+        emb_scale=True,
+        use_rglru_kernel=False,  # flipped on for TPU builds
+    )

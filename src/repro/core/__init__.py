@@ -1,0 +1,50 @@
+"""COSTREAM core: the paper's primary contribution in JAX.
+
+Joint operator-resource graphs, transferable featurization, the 3-stage
+message-passing GNN, per-metric cost models with ensembles, evaluation
+metrics, and the flat-vector baseline.
+"""
+
+from repro.core.features import (
+    OP_FEATURE_DIM,
+    HW_FEATURE_DIM,
+    N_OP_TYPES,
+    featurize_operator,
+    featurize_hardware,
+)
+from repro.core.graph import (
+    MAX_OPS,
+    MAX_HW,
+    JointGraph,
+    build_graph,
+    batch_graphs,
+    drop_hardware,
+    drop_hw_features,
+)
+from repro.core.gnn import GNNConfig, init_gnn, apply_gnn, apply_gnn_batch, apply_gnn_traditional
+from repro.core.model import (
+    ALL_METRICS,
+    REGRESSION_METRICS,
+    CLASSIFICATION_METRICS,
+    CostModelConfig,
+    init_cost_model,
+    forward_ensemble,
+    ensemble_loss,
+    loss_fn,
+    msle_loss,
+    bce_loss,
+    predict,
+    predict_proba,
+    label_array,
+)
+from repro.core.metrics import qerror, qerror_summary, accuracy, balanced_indices
+from repro.core.flat_vector import (
+    FLAT_DIM,
+    FlatVectorConfig,
+    featurize_flat,
+    featurize_flat_traces,
+    init_flat_model,
+    forward_flat,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,157 @@
+"""COSTREAM GNN: node-type encoders + the novel 3-stage message passing.
+
+Implements Algorithm 1 of the paper on the padded dense ``JointGraph``:
+
+  stage 0  h_v   = MLP_{T(v)}(x_v)                         (type-specific encoders)
+  stage 1  OPS->HW   : hosts absorb the states of the operators placed on them
+  stage 2  HW->OPS   : operators absorb the (updated) state of their host
+  stage 3  SOURCES->OPS: states flow along the logical data flow in topological
+                        order (a lax.scan over depth levels with masked updates)
+  readout  sum over all node states -> MLP_out -> prediction
+
+Following the paper's text, every update is
+``h'_v = MLP'_{T(v)}(concat(h_v, sum_{u in children(v)} h'_u))``.
+
+``apply_gnn_traditional`` is the Exp-7b ablation: K rounds of symmetric
+neighbor aggregation with shared (non-type-specific ordering) updates.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.core.features import HW_FEATURE_DIM, N_OP_TYPES, OP_FEATURE_DIM
+from repro.core.graph import MAX_DEPTH, SLOT_RANGES, JointGraph
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    hidden: int = 64
+    enc_layers: int = 2
+    update_layers: int = 2
+    readout_layers: int = 2
+    max_depth: int = MAX_DEPTH
+    n_outputs: int = 1
+    use_pallas: bool = False  # route banked MLPs through the Pallas kernel
+
+
+def init_gnn(key: jax.Array, cfg: GNNConfig) -> nn.Params:
+    ks = jax.random.split(key, 6)
+    h = cfg.hidden
+
+    def sizes(d_in: int, n_layers: int, d_out: int):
+        return [d_in] + [h] * (n_layers - 1) + [d_out]
+
+    return {
+        "op_enc": nn.init_mlp_bank(ks[0], N_OP_TYPES, sizes(OP_FEATURE_DIM, cfg.enc_layers, h)),
+        "hw_enc": nn.init_mlp(ks[1], sizes(HW_FEATURE_DIM, cfg.enc_layers, h)),
+        "op_upd": nn.init_mlp_bank(ks[2], N_OP_TYPES, sizes(2 * h, cfg.update_layers, h)),
+        "hw_upd": nn.init_mlp(ks[3], sizes(2 * h, cfg.update_layers, h)),
+        "out": nn.init_mlp(ks[4], sizes(h, cfg.readout_layers, cfg.n_outputs)),
+    }
+
+
+def _apply_bank(params, x, cfg: GNNConfig):
+    """Type-specific MLP over the canonical slot layout (see graph.SLOT_RANGES)."""
+    if cfg.use_pallas:
+        from repro.kernels.banked_mlp import ops as bank_ops
+
+        return bank_ops.banked_mlp_slotted(params, x, SLOT_RANGES)
+    return nn.apply_mlp_bank_slotted(params, x, SLOT_RANGES)
+
+
+def apply_gnn(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
+    """Forward pass for ONE graph -> (n_outputs,). vmap for batches."""
+    op_mask = g.op_mask[:, None]  # (O,1)
+    hw_mask = g.hw_mask[:, None]  # (W,1)
+
+    # stage 0: type-specific encoders
+    h_ops = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
+    h_hw = nn.apply_mlp(params["hw_enc"], g.hw_x) * hw_mask
+
+    # stage 1: OPS -> HW (co-located operators sum into their host)
+    msg_hw = g.a_place.T @ h_ops  # (W,H)
+    h_hw = (
+        nn.apply_mlp(params["hw_upd"], jnp.concatenate([h_hw, msg_hw], axis=-1)) * hw_mask
+    )
+
+    # stage 2: HW -> OPS (each operator reads its host's updated state)
+    msg_ops = g.a_place @ h_hw  # (O,H)
+    h_ops = (
+        _apply_bank(params["op_upd"], jnp.concatenate([h_ops, msg_ops], axis=-1), cfg)
+        * op_mask
+    )
+
+    # stage 3: SOURCES -> OPS along the data flow, one depth level at a time
+    if cfg.use_pallas:
+        from repro.kernels.mp_update import ops as mp_ops
+
+        def depth_step(h, d):
+            return (
+                mp_ops.mp_update(
+                    params["op_upd"], h, g.a_flow, g.op_depth, g.op_mask, d, SLOT_RANGES
+                ),
+                None,
+            )
+
+    else:
+
+        def depth_step(h, d):
+            msg = g.a_flow.T @ h  # msg[v] = sum over parents u of h[u]
+            upd = _apply_bank(params["op_upd"], jnp.concatenate([h, msg], axis=-1), cfg)
+            sel = ((g.op_depth == d) & (g.op_mask > 0))[:, None]
+            return jnp.where(sel, upd, h), None
+
+    h_ops, _ = jax.lax.scan(
+        depth_step, h_ops, jnp.arange(1, cfg.max_depth + 1, dtype=g.op_depth.dtype)
+    )
+
+    # readout: sum over all (masked) node states
+    pooled = jnp.sum(h_ops * op_mask, axis=0) + jnp.sum(h_hw * hw_mask, axis=0)
+    return nn.apply_mlp(params["out"], pooled)
+
+
+def apply_gnn_batch(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
+    """(B, ...) graphs -> (B, n_outputs)."""
+    return jax.vmap(lambda gg: apply_gnn(params, gg, cfg))(g)
+
+
+# ---------------------------------------------------------------------------
+# Exp 7b ablation: "traditional" message passing — every node is updated from
+# all of its neighbors each round, regardless of node type and stage ordering.
+# ---------------------------------------------------------------------------
+
+
+def apply_gnn_traditional(
+    params: nn.Params, g: JointGraph, cfg: GNNConfig, n_rounds: int = 3
+) -> jax.Array:
+    op_mask = g.op_mask[:, None]
+    hw_mask = g.hw_mask[:, None]
+
+    h_ops = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
+    h_hw = nn.apply_mlp(params["hw_enc"], g.hw_x) * hw_mask
+
+    # symmetric adjacency: data flow (both directions) + placement (both ways)
+    a_sym = g.a_flow + g.a_flow.T  # (O,O)
+
+    def round_step(carry, _):
+        h_o, h_w = carry
+        msg_o = a_sym @ h_o + g.a_place @ h_w
+        msg_w = g.a_place.T @ h_o
+        h_o2 = (
+            _apply_bank(params["op_upd"], jnp.concatenate([h_o, msg_o], axis=-1), cfg)
+            * op_mask
+        )
+        h_w2 = (
+            nn.apply_mlp(params["hw_upd"], jnp.concatenate([h_w, msg_w], axis=-1)) * hw_mask
+        )
+        return (h_o2, h_w2), None
+
+    (h_ops, h_hw), _ = jax.lax.scan(round_step, (h_ops, h_hw), None, length=n_rounds)
+    pooled = jnp.sum(h_ops * op_mask, axis=0) + jnp.sum(h_hw * hw_mask, axis=0)
+    return nn.apply_mlp(params["out"], pooled)

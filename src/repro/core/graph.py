@@ -1,0 +1,147 @@
+"""Joint operator-resource graph (paper SIII-A) as padded dense arrays.
+
+COSTREAM graphs are tiny (<= ~12 operators, <= 8 hosts) but ragged; on TPU we
+represent them as fixed-shape padded blocks so batched message passing becomes
+masked matmuls (see DESIGN.md SS4). One ``JointGraph`` holds a *batch* of
+graphs when arrays carry a leading batch dim; ``batch_graphs`` stacks singles.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core import features as F
+from repro.dsps.hardware import Cluster
+from repro.dsps.placement import Placement
+from repro.dsps.query import Query
+
+MAX_OPS = 12
+MAX_HW = 8
+# Longest source->sink chain in the corpus: source + 4 filters + agg + sink
+# (depth 6) and the Exp-5 filter-chain variants; 8 leaves head-room while
+# keeping the stage-3 scan short (it dominates step time).
+MAX_DEPTH = 8
+
+# Canonical slot layout: operator i of type t occupies a slot inside t's
+# static range. Type-specific MLPs then run on static slices instead of
+# masked full-width banks (see nn.apply_mlp_bank_slotted) — a 5x FLOP cut
+# that is also the layout the Pallas kernel tiles on.
+#   type id: SOURCE=0, FILTER=1, AGGREGATE=2, JOIN=3, SINK=4 (features.OP_TYPE_IDS)
+SLOT_RANGES = (
+    (0, 0, 3),  # up to 3 sources
+    (1, 3, 7),  # up to 4 filters
+    (2, 7, 9),  # up to 2 aggregations
+    (3, 9, 11),  # up to 2 joins
+    (4, 11, 12),  # 1 sink
+)
+
+
+class JointGraph(NamedTuple):
+    """Padded joint graph; all fields are numpy/jnp arrays.
+
+    Shapes below are for a single graph; batched graphs prepend a batch dim.
+    """
+
+    op_x: np.ndarray  # (MAX_OPS, OP_FEATURE_DIM) float32
+    op_type: np.ndarray  # (MAX_OPS,) int32  in [0, N_OP_TYPES); padded rows are 0
+    op_mask: np.ndarray  # (MAX_OPS,) float32 {0,1}
+    op_depth: np.ndarray  # (MAX_OPS,) int32 topological depth; padded rows 0
+    hw_x: np.ndarray  # (MAX_HW, HW_FEATURE_DIM) float32
+    hw_mask: np.ndarray  # (MAX_HW,) float32 {0,1}
+    a_flow: np.ndarray  # (MAX_OPS, MAX_OPS) float32; a_flow[u, v] = 1 iff u -> v
+    a_place: np.ndarray  # (MAX_OPS, MAX_HW) float32; a_place[i, j] = 1 iff op i on host j
+
+    @property
+    def batched(self) -> bool:
+        return self.op_x.ndim == 3
+
+
+def _slot_assignment(query: Query) -> dict:
+    """op_id -> canonical slot (inside its type's static range)."""
+    base = {t: (start, stop) for (t, start, stop) in SLOT_RANGES}
+    counts = {t: 0 for (t, _, _) in SLOT_RANGES}
+    slots = {}
+    for op in query.operators:
+        t = F.op_type_id(op)
+        start, stop = base[t]
+        assert counts[t] < stop - start, (
+            f"query exceeds slot capacity for type {t}: {query.describe()}"
+        )
+        slots[op.op_id] = start + counts[t]
+        counts[t] += 1
+    return slots
+
+
+def build_graph(
+    query: Query,
+    cluster: Cluster,
+    placement: Placement,
+    max_ops: int = MAX_OPS,
+    max_hw: int = MAX_HW,
+) -> JointGraph:
+    n_ops, n_hw = query.n_ops(), cluster.n_nodes()
+    assert n_ops <= max_ops, f"query has {n_ops} ops > pad {max_ops}"
+    assert n_hw <= max_hw, f"cluster has {n_hw} hosts > pad {max_hw}"
+
+    op_x = np.zeros((max_ops, F.OP_FEATURE_DIM), dtype=np.float32)
+    op_type = np.zeros((max_ops,), dtype=np.int32)
+    op_mask = np.zeros((max_ops,), dtype=np.float32)
+    op_depth = np.zeros((max_ops,), dtype=np.int32)
+    hw_x = np.zeros((max_hw, F.HW_FEATURE_DIM), dtype=np.float32)
+    hw_mask = np.zeros((max_hw,), dtype=np.float32)
+    a_flow = np.zeros((max_ops, max_ops), dtype=np.float32)
+    a_place = np.zeros((max_ops, max_hw), dtype=np.float32)
+
+    # fill padded slots with their range's type id so slotted MLPs stay exact
+    for t, start, stop in SLOT_RANGES:
+        op_type[start:stop] = t
+
+    slot = _slot_assignment(query)
+    depths = query.depths()
+    for op in query.operators:
+        i = slot[op.op_id]
+        op_x[i] = F.featurize_operator(op)
+        op_type[i] = F.op_type_id(op)
+        op_mask[i] = 1.0
+        op_depth[i] = depths[op.op_id]
+    for node in cluster.nodes:
+        hw_x[node.node_id] = F.featurize_hardware(node)
+        hw_mask[node.node_id] = 1.0
+    for u, v in query.edges:
+        a_flow[slot[u], slot[v]] = 1.0
+    for i in range(n_ops):
+        a_place[slot[i], placement.node_of(i)] = 1.0
+
+    return JointGraph(
+        op_x=op_x,
+        op_type=op_type,
+        op_mask=op_mask,
+        op_depth=op_depth,
+        hw_x=hw_x,
+        hw_mask=hw_mask,
+        a_flow=a_flow,
+        a_place=a_place,
+    )
+
+
+def batch_graphs(graphs: List[JointGraph]) -> JointGraph:
+    return JointGraph(*[np.stack([getattr(g, f) for g in graphs]) for f in JointGraph._fields])
+
+
+# -- ablation transforms (Exp 7a) ----------------------------------------------
+
+
+def drop_hardware(g: JointGraph) -> JointGraph:
+    """Featurization ablation 1: operators only (no placement, no hardware)."""
+    return g._replace(
+        hw_mask=np.zeros_like(g.hw_mask),
+        a_place=np.zeros_like(g.a_place),
+        hw_x=np.zeros_like(g.hw_x),
+    )
+
+
+def drop_hw_features(g: JointGraph) -> JointGraph:
+    """Featurization ablation 2: placement/co-location kept, hw features zeroed."""
+    return g._replace(hw_x=np.zeros_like(g.hw_x))

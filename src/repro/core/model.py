@@ -1,0 +1,123 @@
+"""COSTREAM cost models: per-metric GNNs + losses + ensembles (paper SIV-A).
+
+Five metrics, five separately trained models sharing the GNN architecture:
+regression (throughput, processing latency, e2e latency) trained with MSLE in
+log1p space, classification (backpressure occurrence, query success) trained
+with BCE. Ensembles of E members (different init seeds) are vmap-stacked;
+inference takes the mean (regression) / majority vote (classification) exactly
+as SIV-A prescribes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core.gnn import GNNConfig, apply_gnn_batch, apply_gnn_traditional, init_gnn
+from repro.core.graph import JointGraph
+
+REGRESSION_METRICS = ("throughput", "latency_p", "latency_e")
+CLASSIFICATION_METRICS = ("backpressure", "success")
+ALL_METRICS = REGRESSION_METRICS + CLASSIFICATION_METRICS
+
+
+@dataclass(frozen=True)
+class CostModelConfig:
+    metric: str = "latency_p"
+    gnn: GNNConfig = GNNConfig()
+    n_ensemble: int = 3
+    traditional_mp: bool = False  # Exp-7b ablation
+
+    @property
+    def task(self) -> str:
+        if self.metric in REGRESSION_METRICS:
+            return "regression"
+        assert self.metric in CLASSIFICATION_METRICS, self.metric
+        return "classification"
+
+
+def init_cost_model(key: jax.Array, cfg: CostModelConfig) -> nn.Params:
+    """Ensemble params: every leaf gets a leading (n_ensemble,) axis."""
+    keys = jax.random.split(key, cfg.n_ensemble)
+    return jax.vmap(lambda k: init_gnn(k, cfg.gnn))(keys)
+
+
+def _forward_single(params, g: JointGraph, cfg: CostModelConfig) -> jax.Array:
+    if cfg.traditional_mp:
+        out = jax.vmap(lambda gg: apply_gnn_traditional(params, gg, cfg.gnn))(g)
+    else:
+        out = apply_gnn_batch(params, g, cfg.gnn)
+    return out[..., 0]  # (B,)
+
+
+def forward_ensemble(params, g: JointGraph, cfg: CostModelConfig) -> jax.Array:
+    """(E-stacked params, batch of graphs) -> raw outputs (E, B).
+
+    Raw output is log1p(cost) for regression, a logit for classification.
+    """
+    return jax.vmap(lambda p: _forward_single(p, g, cfg))(params)
+
+
+# -- losses ---------------------------------------------------------------------
+
+
+def msle_loss(raw: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean squared logarithmic error; ``raw`` already lives in log1p space."""
+    return jnp.mean(jnp.square(raw - jnp.log1p(y)))
+
+
+def bce_loss(raw: jax.Array, y: jax.Array) -> jax.Array:
+    """Binary cross-entropy with logits."""
+    return jnp.mean(
+        jnp.maximum(raw, 0.0) - raw * y + jnp.log1p(jnp.exp(-jnp.abs(raw)))
+    )
+
+
+def loss_fn(cfg: CostModelConfig) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    return msle_loss if cfg.task == "regression" else bce_loss
+
+
+def ensemble_loss(params, g: JointGraph, y: jax.Array, cfg: CostModelConfig) -> jax.Array:
+    """Sum of member losses (members are independent; grads don't mix)."""
+    raw = forward_ensemble(params, g, cfg)  # (E, B)
+    per_member = jax.vmap(lambda r: loss_fn(cfg)(r, y))(raw)
+    return jnp.sum(per_member)
+
+
+# -- inference --------------------------------------------------------------------
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=64)
+def _jitted_forward(cfg: CostModelConfig):
+    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+
+
+def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Ensemble prediction in *cost space* (paper SIV-A).
+
+    regression: mean over members of expm1(raw); classification: majority vote
+    over thresholded member probabilities -> {0,1}.
+    """
+    raw = np.asarray(_jitted_forward(cfg)(params, g))  # (E, B)
+    if cfg.task == "regression":
+        return np.mean(np.expm1(raw), axis=0).clip(min=0.0)
+    votes = (raw > 0.0).astype(np.int64)  # logit > 0 <=> p > 0.5
+    return (votes.sum(axis=0) * 2 > votes.shape[0]).astype(np.int64)
+
+
+def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    raw = np.asarray(_jitted_forward(cfg)(params, g))
+    assert cfg.task == "classification"
+    return 1.0 / (1.0 + np.exp(-raw)).mean(axis=0)
+
+
+def label_array(traces, metric: str) -> np.ndarray:
+    return np.asarray([t.labels.as_dict()[metric] for t in traces], dtype=np.float32)

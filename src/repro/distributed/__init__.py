@@ -1,0 +1,15 @@
+"""Distribution substrate: sharding rules, DP train step with explicit
+compressed gradient reduction, pipeline parallelism."""
+
+from repro.models.params import ShardingRules, shardings, specs, spec_for
+from repro.distributed.dp import make_dp_train_step
+from repro.distributed.pipeline import pipeline_forward
+
+__all__ = [
+    "ShardingRules",
+    "shardings",
+    "specs",
+    "spec_for",
+    "make_dp_train_step",
+    "pipeline_forward",
+]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Three kernels (each: kernel.py = pl.pallas_call + BlockSpec, ops.py = jit'd
+wrapper with custom_vjp, ref.py = pure-jnp oracle):
+
+* ``banked_mlp``  — fused 2-layer node-type-specific MLP over the canonical
+  slot layout (COSTREAM encoder / update networks).
+* ``mp_update``   — one stage-3 message-passing depth step fused end-to-end:
+  adjacency matmul + concat + banked MLP + depth-select.
+* ``rglru``       — chunked RG-LRU linear recurrence (RecurrentGemma blocks),
+  VMEM-tiled over (batch, channel) with sequential in-kernel time loop.
+
+On CPU all kernels run under ``interpret=True`` (the container has no TPU);
+the BlockSpecs are written for TPU v5e VMEM (16 MiB/core) and MXU alignment.
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.banked_mlp import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,61 @@
+"""jit'd public wrapper for the banked-MLP kernel.
+
+Forward runs the Pallas kernel (interpret=True on CPU); backward delegates to
+the VJP of the jnp oracle via custom_vjp, so the op is trainable everywhere.
+Accepts (N, F) single graphs (auto-batched) or (B, N, F) batches; arbitrary
+leading dims via vmap are supported by the Pallas batching rule.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banked_mlp.kernel import banked_mlp_slotted_pallas
+from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _banked_mlp(params, x, slot_ranges):
+    if x.ndim == 2:
+        return banked_mlp_slotted_pallas(
+            params, x[None], slot_ranges, tile_b=1, interpret=_use_interpret()
+        )[0]
+    B = x.shape[0]
+    tile = 128 if B % 128 == 0 else (B if B <= 128 else _largest_tile(B))
+    return banked_mlp_slotted_pallas(
+        params, x, slot_ranges, tile_b=tile, interpret=_use_interpret()
+    )
+
+
+def _largest_tile(b: int, cap: int = 128) -> int:
+    for t in range(min(cap, b), 0, -1):
+        if b % t == 0:
+            return t
+    return 1
+
+
+def _fwd(params, x, slot_ranges):
+    return _banked_mlp(params, x, slot_ranges), (params, x)
+
+
+def _bwd(slot_ranges, res, g):
+    params, x = res
+    _, vjp = jax.vjp(lambda p, xx: banked_mlp_slotted_ref(p, xx, slot_ranges), params, x)
+    return vjp(g)
+
+
+_banked_mlp.defvjp(_fwd, _bwd)
+
+
+def banked_mlp_slotted(params, x: jax.Array, slot_ranges: Sequence[Tuple[int, int, int]]):
+    """Fused type-specific 2-layer MLP on the canonical slot layout."""
+    assert len(params["layers"]) == 2, "kernel fuses exactly two layers"
+    return _banked_mlp(params, x, tuple(slot_ranges))

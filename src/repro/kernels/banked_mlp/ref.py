@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused slotted banked 2-layer MLP."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def banked_mlp_slotted_ref(
+    params,
+    x: jax.Array,
+    slot_ranges: Sequence[Tuple[int, int, int]],
+) -> jax.Array:
+    """x: (..., N, F) -> (..., N, H2). Two layers, ReLU between.
+
+    params follows nn.init_mlp_bank: {"layers": [{"w": (T,F,H1), "b": (T,H1)},
+    {"w": (T,H1,H2), "b": (T,H2)}]}.
+    """
+    l1, l2 = params["layers"]
+    pieces = []
+    for t, start, stop in slot_ranges:
+        h = jax.nn.relu(x[..., start:stop, :] @ l1["w"][t] + l1["b"][t])
+        pieces.append(h @ l2["w"][t] + l2["b"][t])
+    return jnp.concatenate(pieces, axis=-2)

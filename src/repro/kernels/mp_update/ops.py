@@ -1,0 +1,74 @@
+"""jit'd wrapper for the fused MP depth-step kernel (custom_vjp via oracle)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mp_update.kernel import mp_update_pallas
+from repro.kernels.mp_update.ref import mp_update_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _largest_tile(b: int, cap: int = 128) -> int:
+    for t in range(min(cap, b), 0, -1):
+        if b % t == 0:
+            return t
+    return 1
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _mp_update(params, h, a_flow, depth, mask, d, slot_ranges):
+    squeeze = h.ndim == 2
+    if squeeze:
+        h, a_flow, depth, mask = h[None], a_flow[None], depth[None], mask[None]
+    out = mp_update_pallas(
+        params,
+        h,
+        a_flow,
+        depth,
+        mask,
+        d,
+        slot_ranges,
+        tile_b=_largest_tile(h.shape[0]),
+        interpret=_use_interpret(),
+    )
+    return out[0] if squeeze else out
+
+
+def _fwd(params, h, a_flow, depth, mask, d, slot_ranges):
+    return _mp_update(params, h, a_flow, depth, mask, d, slot_ranges), (
+        params,
+        h,
+        a_flow,
+        depth,
+        mask,
+        d,
+    )
+
+
+def _bwd(slot_ranges, res, g):
+    params, h, a_flow, depth, mask, d = res
+    _, vjp = jax.vjp(
+        lambda p, hh, aa: mp_update_ref(p, hh, aa, depth, mask, d, slot_ranges),
+        params,
+        h,
+        a_flow,
+    )
+    dp, dh, da = vjp(g)
+    return dp, dh, da, None, None, None
+
+
+_mp_update.defvjp(_fwd, _bwd)
+
+
+def mp_update(params, h, a_flow, depth, mask, d, slot_ranges: Sequence[Tuple[int, int, int]]):
+    """Fused stage-3 depth step: aggregate -> concat -> banked MLP -> select."""
+    assert len(params["layers"]) == 2
+    return _mp_update(params, h, a_flow, depth, mask, d, tuple(slot_ranges))

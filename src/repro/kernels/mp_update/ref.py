@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused message-passing depth step."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
+
+
+def mp_update_ref(
+    params,
+    h: jax.Array,  # (..., N, H)
+    a_flow: jax.Array,  # (..., N, N)  a_flow[u, v] = 1 iff u -> v
+    depth: jax.Array,  # (..., N) int32
+    mask: jax.Array,  # (..., N) float {0,1}
+    d: jax.Array,  # scalar int32: the depth level being updated
+    slot_ranges: Sequence[Tuple[int, int, int]],
+) -> jax.Array:
+    """One SOURCES->OPS depth step: aggregate parents, update, select."""
+    msg = jnp.swapaxes(a_flow, -1, -2) @ h  # msg[v] = sum_{u: u->v} h[u]
+    upd = banked_mlp_slotted_ref(params, jnp.concatenate([h, msg], axis=-1), slot_ranges)
+    sel = ((depth == d) & (mask > 0))[..., None]
+    return jnp.where(sel, upd, h)

@@ -1,0 +1,52 @@
+"""jit'd wrapper for the RG-LRU linear-scan kernel (custom_vjp via oracle).
+
+The backward pass of h_t = a_t h_{t-1} + b_t is itself a reversed linear
+scan; we express it through the oracle's VJP (associative scan), keeping the
+op trainable while the forward uses the chunked kernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import linear_scan_pallas
+from repro.kernels.rglru.ref import linear_scan_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _largest_tile(n: int, cap: int) -> int:
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@jax.custom_vjp
+def linear_scan(a, b, h0):
+    return linear_scan_pallas(
+        a,
+        b,
+        h0,
+        tile_b=_largest_tile(a.shape[0], 4),
+        tile_t=_largest_tile(a.shape[1], 128),
+        interpret=_use_interpret(),
+    )
+
+
+def _fwd(a, b, h0):
+    return linear_scan(a, b, h0), (a, b, h0)
+
+
+def _bwd(res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(linear_scan_ref, a, b, h0)
+    return vjp(g)
+
+
+linear_scan.defvjp(_fwd, _bwd)

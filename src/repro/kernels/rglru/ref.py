@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the gated linear recurrence  h_t = a_t * h_{t-1} + b_t.
+
+This is the state update at the heart of the RG-LRU (RecurrentGemma /
+Griffin) block once the gates have been applied; the oracle uses an
+associative scan (what XLA would give you without a kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """a, b: (B, T, D); h0: (B, D) -> h: (B, T, D) with h_t = a_t h_{t-1} + b_t."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return aa * h0[:, None, :] + bb

@@ -1,0 +1,81 @@
+"""Artifact store: trained model parameters + metadata under artifacts/.
+
+Every benchmark harness reads models from here; the training driver writes
+them. Params are saved with the atomic checkpoint writer; metadata (model
+config, corpus seeds, training history) lives in the manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.gnn import GNNConfig
+from repro.core.model import CostModelConfig, init_cost_model
+from repro.core.flat_vector import FlatVectorConfig, init_flat_model
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+
+ROOT = os.environ.get("REPRO_ARTIFACTS", os.path.join(os.path.dirname(__file__), "../../../artifacts"))
+
+
+def path(*parts: str) -> str:
+    p = os.path.abspath(os.path.join(ROOT, *parts))
+    return p
+
+
+def save_cost_model(name: str, params, cfg: CostModelConfig, extra: Optional[Dict] = None):
+    d = path("costream", name)
+    meta = {
+        "metric": cfg.metric,
+        "n_ensemble": cfg.n_ensemble,
+        "traditional_mp": cfg.traditional_mp,
+        "gnn": dataclasses.asdict(cfg.gnn),
+        **(extra or {}),
+    }
+    save_checkpoint(d, 0, params, extra=meta, keep=1)
+
+
+def load_cost_model(name: str) -> Tuple[object, CostModelConfig]:
+    d = path("costream", name)
+    # read manifest first to rebuild the config/like-tree
+    step_dir = os.path.join(d, "step_0000000000")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        meta = json.load(f)["extra"]
+    gnn_kwargs = dict(meta["gnn"])
+    cfg = CostModelConfig(
+        metric=meta["metric"],
+        n_ensemble=meta["n_ensemble"],
+        traditional_mp=meta.get("traditional_mp", False),
+        gnn=GNNConfig(**gnn_kwargs),
+    )
+    like = init_cost_model(jax.random.PRNGKey(0), cfg)
+    params, _, _ = restore_checkpoint(d, like)
+    assert params is not None, f"no checkpoint under {d}"
+    return params, cfg
+
+
+def save_flat_model(name: str, params, cfg: FlatVectorConfig, extra: Optional[Dict] = None):
+    d = path("flat", name)
+    meta = {"hidden": cfg.hidden, "n_layers": cfg.n_layers, "task": cfg.task, **(extra or {})}
+    save_checkpoint(d, 0, params, extra=meta, keep=1)
+
+
+def load_flat_model(name: str) -> Tuple[object, FlatVectorConfig]:
+    d = path("flat", name)
+    step_dir = os.path.join(d, "step_0000000000")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        meta = json.load(f)["extra"]
+    cfg = FlatVectorConfig(hidden=meta["hidden"], n_layers=meta["n_layers"], task=meta["task"])
+    like = init_flat_model(jax.random.PRNGKey(0), cfg)
+    params, _, _ = restore_checkpoint(d, like)
+    assert params is not None, f"no checkpoint under {d}"
+    return params, cfg
+
+
+def exists(kind: str, name: str) -> bool:
+    return os.path.exists(path(kind, name, "latest"))

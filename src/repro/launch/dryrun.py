@@ -1,0 +1,344 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+)
+
+# ^ MUST precede any jax-importing module: jax locks the device count on first
+# backend initialization. Everything below is a normal module.
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture x input shape) cell, lower + compile the appropriate
+step (train_step / prefill_step / serve_step) against the production mesh —
+16x16 single-pod and 2x16x16 multi-pod — with ShapeDtypeStruct inputs (no
+allocation), then record:
+
+  * memory_analysis()   — proves the partitioned program fits
+  * cost_analysis()     — per-chip FLOPs / bytes for the roofline
+  * collective bytes    — parsed from the optimized HLO
+  * the three roofline terms + dominant bottleneck (SRoofline)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_supported, get_config, get_shape, input_specs
+from repro.launch import artifacts
+from repro.launch.mesh import data_axes, make_production_mesh, n_chips
+from repro.launch.roofline import model_flops_estimate, terms_from_compiled
+from repro.models.params import ShardingRules, abstract, count_params, shardings
+from repro.models.steps import TrainStepConfig, make_prefill_step, make_serve_step, make_train_step
+from repro.models.transformer import ModelConfig, model_cache_defs, model_defs
+from repro.training.optim import AdamState
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: routed experts count at top_k/E)."""
+    total = count_params(model_defs(cfg))
+    if cfg.moe is None:
+        return total
+    # expert weights: 3 matrices per expert per MoE layer
+    n_moe_layers = sum(k in ("moe", "mla_moe") for k in cfg.prefix) + cfg.n_groups * sum(
+        k in ("moe", "mla_moe") for k in cfg.pattern
+    ) + sum(k in ("moe", "mla_moe") for k in cfg.suffix)
+    per_expert = 3 * cfg.d_model * cfg.moe.expert_ff
+    routed = n_moe_layers * cfg.moe.n_experts * per_expert
+    active_routed = n_moe_layers * cfg.moe.top_k * per_expert
+    return total - routed + active_routed
+
+
+def batch_sharding(spec_tree, mesh):
+    """Shardings for the abstract input batch: batch dim over (pod, data)."""
+    daxes = data_axes(mesh)
+    ax = daxes if len(daxes) > 1 else daxes[0]
+
+    def per_leaf(s):
+        if s.shape == ():
+            return NamedSharding(mesh, P())
+        parts = [None] * len(s.shape)
+        if s.shape[0] % np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]) == 0:
+            parts[0] = ax
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(per_leaf, spec_tree)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, rules: ShardingRules,
+               tcfg: TrainStepConfig):
+    """Returns (fn, abstract_args, in_shardings) for the cell's step."""
+    shape = get_shape(shape_name)
+    specs_in = input_specs(cfg, shape)
+    pdefs = model_defs(cfg)
+    params_abs = abstract(pdefs)
+    params_sh = shardings(pdefs, rules, mesh)
+
+    if shape.kind == "train":
+        train_step, opt = make_train_step(cfg, tcfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_sh = AdamState(
+            step=NamedSharding(mesh, P()),
+            mu=params_sh,
+            nu=params_sh,
+        )
+        state_abs = {
+            "params": params_abs,
+            "opt": opt_abs,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_sh = {"params": params_sh, "opt": opt_sh, "step": NamedSharding(mesh, P())}
+        args = (state_abs, specs_in)
+        in_sh = (state_sh, batch_sharding(specs_in, mesh))
+        return train_step, args, in_sh
+
+    if shape.kind == "prefill":
+        prefill = make_prefill_step(cfg)
+        args = (params_abs, specs_in)
+        in_sh = (params_sh, batch_sharding(specs_in, mesh))
+        return prefill, args, in_sh
+
+    # decode
+    serve = make_serve_step(cfg)
+    cdefs = model_cache_defs(cfg, shape.global_batch, shape.seq_len)
+    cache_abs = specs_in["cache"]
+    cache_sh = shardings(cdefs, rules, mesh)
+    tok_abs = specs_in["tokens"]
+    args = (params_abs, cache_abs, tok_abs, specs_in["cache_len"])
+    in_sh = (
+        params_sh,
+        cache_sh,
+        batch_sharding(tok_abs, mesh),
+        NamedSharding(mesh, P()),
+    )
+    return serve, args, in_sh
+
+
+def _lower_terms(cfg, shape_name, mesh, rules, tcfg, model_flops, seq_parallel=False):
+    """Lower+compile one config variant and return its raw roofline terms."""
+    from repro.models import sharding_ctx
+
+    fn, args, in_sh = build_cell(cfg, shape_name, mesh, rules, tcfg)
+    with mesh, sharding_ctx.use_mesh(mesh, seq_parallel=seq_parallel):
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+    return terms_from_compiled(compiled, compiled.as_text(), model_flops)
+
+
+def _delta_correct(cfg, shape_name, mesh, rules, tcfg, terms, model_flops, seq_parallel=False):
+    """Per-group linear extrapolation of flops/bytes/collective bytes."""
+    from repro.models import blocks as B
+
+    n = cfg.n_groups
+    if n < 2 or (cfg.enc_pattern and cfg.enc_groups != n):
+        return terms, {"delta": False, "reason": "n_groups<2 or enc mismatch"}
+    try:
+        B.set_attn_unroll_cap(64)
+        kw: Dict[str, Any] = {"n_groups": 1, "scan_layers": False}
+        kw2: Dict[str, Any] = {"n_groups": 2, "scan_layers": False}
+        if cfg.enc_pattern:
+            kw["enc_groups"] = 1
+            kw2["enc_groups"] = 2
+        t1 = _lower_terms(
+            dataclasses.replace(cfg, **kw), shape_name, mesh, rules, tcfg, model_flops,
+            seq_parallel=seq_parallel,
+        )
+        t2 = _lower_terms(
+            dataclasses.replace(cfg, **kw2), shape_name, mesh, rules, tcfg, model_flops,
+            seq_parallel=seq_parallel,
+        )
+    except Exception as e:  # keep the uncorrected terms rather than fail the cell
+        return terms, {"delta": False, "reason": f"{type(e).__name__}: {e}"}
+    finally:
+        B.set_attn_unroll_cap(1)
+
+    def extrap(a, b):
+        return max(a + (b - a) * (n - 1), 0.0)
+
+    corrected = dataclasses.replace(
+        terms,
+        flops=extrap(t1.flops, t2.flops),
+        hbm_bytes=extrap(t1.hbm_bytes, t2.hbm_bytes),
+        coll_bytes=extrap(t1.coll_bytes, t2.coll_bytes),
+    )
+    meta = {
+        "delta": True,
+        "g1": {"flops": t1.flops, "bytes": t1.hbm_bytes, "coll": t1.coll_bytes},
+        "g2": {"flops": t2.flops, "bytes": t2.hbm_bytes, "coll": t2.coll_bytes},
+        "scanned_raw": {
+            "flops": terms.flops,
+            "bytes": terms.hbm_bytes,
+            "coll": terms.coll_bytes,
+        },
+    }
+    return corrected, meta
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    rules: Optional[ShardingRules] = None,
+    save: bool = True,
+    verbose: bool = True,
+    tag: str = "",
+    tcfg: Optional[TrainStepConfig] = None,
+    mutate_cfg=None,  # ModelConfig -> ModelConfig (hillclimb variants)
+    seq_parallel: bool = False,  # Megatron-SP activation sharding
+) -> Dict[str, Any]:
+    shape = get_shape(shape_name)
+    ok, why = cell_supported(arch, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    cell = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skipped" if not ok else "pending",
+    }
+    if not ok:
+        cell["skip_reason"] = why
+        if verbose:
+            print(f"[skip] {arch} x {shape_name} ({mesh_name}): {why}")
+        return cell
+
+    cfg = get_config(arch)
+    if mutate_cfg is not None:
+        cfg = mutate_cfg(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or ShardingRules()
+    # big-model dry-runs keep Adam moments in bf16 (no fp32 master; DESIGN SS7)
+    tcfg = tcfg or TrainStepConfig(
+        moment_dtype=jnp.bfloat16 if count_params(model_defs(cfg)) > 5e10 else jnp.float32
+    )
+
+    from repro.models import sharding_ctx
+
+    t0 = time.time()
+    try:
+        fn, args, in_sh = build_cell(cfg, shape_name, mesh, rules, tcfg)
+        with mesh, sharding_ctx.use_mesh(mesh, seq_parallel=seq_parallel):
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            mem_d[k] = int(getattr(mem, k, 0) or 0)
+
+        hlo = compiled.as_text()
+        n_active = active_params(cfg)
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops_estimate(n_active, tokens, "train")
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+            mf = model_flops_estimate(n_active, tokens, "fwd")
+        else:
+            tokens = shape.global_batch  # one new token per sequence
+            mf = model_flops_estimate(n_active, tokens, "fwd")
+        terms = terms_from_compiled(compiled, hlo, mf)
+        # XLA cost_analysis counts a while-loop body ONCE, so the scanned
+        # layer stack is undercounted by ~n_groups. Correct with the delta
+        # method: lower 1-group and 2-group variants (attention chunk scans
+        # unrolled) and extrapolate per-group cost linearly.
+        terms, delta_meta = _delta_correct(
+            cfg, shape_name, mesh, rules, tcfg, terms, mf, seq_parallel=seq_parallel
+        )
+
+        chips = n_chips(mesh)
+        cell.update(
+            {
+                "status": "ok",
+                "chips": chips,
+                "n_params": count_params(model_defs(cfg)),
+                "n_params_active": n_active,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "memory": mem_d,
+                "roofline": terms.as_dict(chips),
+                "delta_correction": delta_meta,
+            }
+        )
+        if verbose:
+            r = cell["roofline"]
+            print(
+                f"[ok] {arch} x {shape_name} ({mesh_name}{tag}): "
+                f"Tc={r['t_compute_s']:.3e}s Tm={r['t_memory_s']:.3e}s "
+                f"Tcoll={r['t_collective_s']:.3e}s -> {r['bottleneck']}; "
+                f"temp/chip={mem_d['temp_size_in_bytes']/1e9:.2f}GB "
+                f"args/chip={mem_d['argument_size_in_bytes']/1e9:.2f}GB "
+                f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+            )
+    except Exception as e:
+        cell["status"] = "error"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERR] {arch} x {shape_name} ({mesh_name}): {cell['error']}")
+
+    if save:
+        outdir = artifacts.path("dryrun", mesh_name + tag)
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, f"{arch}__{shape_name}.json"), "w") as f:
+            json.dump(cell, f, indent=2, default=str)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                out = artifacts.path("dryrun", mesh_name, f"{arch}__{shape}.json")
+                if args.skip_existing and os.path.exists(out):
+                    with open(out) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {arch} x {shape} ({mesh_name})")
+                        results.append(prev)
+                        continue
+                results.append(run_cell(arch, shape, mp))
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n=== dry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors ===")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

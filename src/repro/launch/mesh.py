@@ -1,0 +1,58 @@
+"""Production mesh construction (deliverable (e)).
+
+Target: TPU v5e pods. Single pod = 256 chips as a (data=16, model=16) mesh;
+multi-pod = 2 pods = 512 chips as (pod=2, data=16, model=16), where the pod
+axis extends data parallelism across the inter-pod DCN/ICI boundary.
+
+Import of this module never touches jax device state: the mesh is built by a
+FUNCTION so the dry-run (which forces 512 host devices) controls when jax
+first initializes.
+
+Real-TPU launch flags (inert on CPU; recorded here for cluster runs):
+  --xla_tpu_enable_async_collective_fusion=true
+  --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+  --xla_tpu_overlap_compute_collective_tc=true
+  --xla_enable_async_all_gather=true
+  --xla_enable_async_collective_permute=true
+  --xla_tpu_spmd_threshold_for_allgather_cse=10000
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+TPU_PERF_FLAGS = (
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+    "--xla_enable_async_all_gather=true "
+    "--xla_enable_async_collective_permute=true"
+)
+
+# v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic reconfiguration."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def n_chips(mesh) -> int:
+    import numpy as np
+
+    return int(np.prod(list(mesh.shape.values())))

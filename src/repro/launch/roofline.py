@@ -1,0 +1,172 @@
+"""Roofline analysis (deliverable (g)).
+
+Derives the three roofline terms from a compiled dry-run artifact:
+
+  compute term    = HLO_FLOPs            / (peak_FLOP/s per chip)
+  memory term     = HLO_bytes_accessed   / (HBM bytes/s per chip)
+  collective term = collective_bytes     / (ICI bytes/s per chip)
+
+``compiled.cost_analysis()`` reports the *per-partition* module cost under
+SPMD, so the terms above are per-chip step-time lower bounds already.
+collective_bytes is parsed from the optimized HLO text: we sum the result
+(shard) sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[d0,d1,...]' shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shapes_str, opname = m.groups()
+        # strip async wrappers: 'all-gather-start'/'-done' count once at start
+        base = opname.replace("-start", "")
+        if base.endswith("-done") or base not in COLLECTIVES:
+            continue
+        # result may be a tuple '(f32[..], f32[..])'
+        total = 0
+        if shapes_str.startswith("("):
+            for part in shapes_str.strip("()").split(","):
+                part = part.strip()
+                if "[" in part:
+                    # recombine 'f32[8' + '128]' splits: fall back to regex scan
+                    pass
+            for sm in _SHAPE_RE.finditer(shapes_str):
+                total += _shape_bytes(sm.group(0))
+        else:
+            total = _shape_bytes(shapes_str)
+        out[base] += total
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float  # per-chip HLO flops
+    hbm_bytes: float  # per-chip bytes accessed
+    coll_bytes: float  # per-chip collective bytes moved
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0  # 6*N*D (train) or 2*N_active*D (inference), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def useful_flops_ratio(self, n_chips: int) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips): remat/redundancy waste."""
+        total = self.flops * n_chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    def roofline_fraction(self, n_chips: int) -> float:
+        """Useful-FLOPs MFU bound implied by the dominant term."""
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_step <= 0:
+            return 0.0
+        return self.model_flops / (n_chips * PEAK_FLOPS_BF16 * t_step)
+
+    def as_dict(self, n_chips: int) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio(n_chips),
+            "roofline_fraction": self.roofline_fraction(n_chips),
+            "collectives": self.coll_breakdown,
+        }
+
+
+def terms_from_compiled(
+    compiled, hlo_text: str, model_flops: float
+) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(total_coll),
+        coll_breakdown=coll,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(n_params_active: int, tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D for a forward (prefill/decode)."""
+    if kind == "train":
+        return 6.0 * n_params_active * tokens
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,7 @@
+"""Assigned LM-family architectures (dense / MoE / hybrid / SSM / enc-dec).
+
+One generic transformer substrate with per-layer block kinds covers all ten
+assigned architectures; parameters are declared as ``ParamDef`` trees that
+carry logical sharding axes, so the same definition drives smoke tests
+(materialized), the multi-pod dry-run (abstract), and sharding rules.
+"""

@@ -1,0 +1,767 @@
+"""Transformer building blocks for the assigned architectures.
+
+Every block ships a ``*_defs(cfg)`` (ParamDef tree, carries sharding axes) and
+an ``apply_*`` function. Covered:
+
+* attention: GQA/MQA, qk-norm (qwen3), attention/final logit softcap (gemma2),
+  sliding-window local attention (gemma2, recurrentgemma), MLA with compressed
+  KV (deepseek-v2), bidirectional encoder + cross attention (whisper);
+  KV-cache decode for all of them.
+* FFN: SwiGLU / GeGLU / GELU.
+* MoE: top-k router with capacity-based one-hot dispatch (GShard-style einsum
+  formulation — GSPMD-friendly), optional shared experts (deepseek-v2) and a
+  dense residual branch (arctic).
+* RG-LRU recurrent block (recurrentgemma) over the Pallas linear-scan kernel's
+  oracle formulation (kernel used on TPU).
+* xLSTM: mLSTM (matrix memory, chunkwise-recurrent) and sLSTM (scalar memory)
+  blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, pdef
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# small pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_defs(d: int) -> Params:
+    return {"scale": pdef((d,), (None,), init="zeros", dtype=jnp.float32)}
+
+
+def apply_rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"])).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angle = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    window: Optional[int] = None  # sliding-window size; None = global
+    causal: bool = True
+    rope_theta: float = 10_000.0
+    cross: bool = False  # cross-attention (kv from encoder output)
+
+
+def attn_defs(c: AttnConfig) -> Params:
+    d, h, kv, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+    # granularity = head_dim: tensor parallelism may split heads apart but
+    # never inside one head (element-sharded heads cross-contaminate the
+    # attention einsums and blow up collectives)
+    p = {
+        "wq": pdef((d, h * hd), ("embed", "heads"), granularity=(1, hd)),
+        "wk": pdef((d, kv * hd), ("embed", "kv"), granularity=(1, hd)),
+        "wv": pdef((d, kv * hd), ("embed", "kv"), granularity=(1, hd)),
+        "wo": pdef((h * hd, d), ("heads", "embed"), granularity=(hd, 1)),
+    }
+    if c.qk_norm:
+        p["q_norm"] = rmsnorm_defs(hd)
+        p["k_norm"] = rmsnorm_defs(hd)
+    return p
+
+
+# k-sequence chunk length for blocked attention; naive path below this size.
+ATTN_BLOCK = 1024
+
+# Roofline-lowering mode: unroll the chunk scan (trip counts <= this cap) so
+# HLO cost_analysis counts every chunk instead of one while-loop body. The
+# dry-run sets this; normal execution keeps the rolled loop (smaller HLO).
+_ATTN_UNROLL_CAP = 1
+
+
+def set_attn_unroll_cap(cap: int) -> None:
+    global _ATTN_UNROLL_CAP
+    _ATTN_UNROLL_CAP = cap
+
+
+def _attend_naive(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    q_pos: jax.Array,  # (Sq,) or (B, Sq)
+    k_pos: jax.Array,  # (Sk,)
+    causal: bool,
+    window: Optional[int],
+    cap: Optional[float],
+    k_len: Optional[jax.Array] = None,  # valid cache length for decode
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, Sq, KV, rep, D)
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qh.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / math.sqrt(D)
+    logits = softcap(logits, cap)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]
+    mask = jnp.ones((B, Sq, k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qp[:, :, None] >= k_pos[None, None, :]
+    if window is not None:
+        mask &= (qp[:, :, None] - k_pos[None, None, :]) < window
+    if k_len is not None:
+        mask &= k_pos[None, None, :] < jnp.asarray(k_len).reshape(-1, 1, 1)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D)
+
+
+def _attend_blocked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool,
+    window: Optional[int],
+    cap: Optional[float],
+    k_len: Optional[jax.Array] = None,
+    block: int = ATTN_BLOCK,
+) -> jax.Array:
+    """Flash-style online-softmax attention over k-chunks.
+
+    Never materializes the (Sq, Sk) logits — memory is O(Sq x block). This is
+    the default for Sk > ATTN_BLOCK (the naive path at 32k sequence would
+    materialize multi-TB logit tensors; see EXPERIMENTS.md SPerf iteration 1).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    nblk = (Sk + block - 1) // block
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    qh = (q.astype(jnp.float32) / math.sqrt(D)).reshape(B, Sq, KV, rep, D)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]
+
+    kb = k.reshape(B, nblk, block, KV, D)
+    vb = v.reshape(B, nblk, block, KV, D)
+    pb = k_pos.reshape(nblk, block)
+
+    def chunk(carry, blk):
+        m, l, acc = carry  # (B,KV,rep,Sq), (B,KV,rep,Sq), (B,KV,rep,Sq,D)
+        kc, vc, pc = blk
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qh, kc.astype(jnp.float32))
+        logits = softcap(logits, cap)
+        mask = jnp.ones((B, Sq, block), dtype=bool)
+        if causal:
+            mask &= qp[:, :, None] >= pc[None, None, :]
+        if window is not None:
+            mask &= (qp[:, :, None] - pc[None, None, :]) < window
+        if k_len is not None:
+            mask &= pc[None, None, :] < jnp.asarray(k_len).reshape(-1, 1, 1)
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bkrqs,bskd->bkrqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, rep, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        # checkpoint per chunk: the scan VJP then saves only the (m, l, acc)
+        # carries instead of stacking per-chunk fp32 probabilities (which
+        # would re-materialize the full S^2 tensor across iterations)
+        jax.checkpoint(chunk),
+        (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb),
+        unroll=nblk if nblk <= _ATTN_UNROLL_CAP else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,KV,rep,Sq,D)
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, D)
+
+
+def _attend(q, k, v, **kw):
+    if k.shape[1] > ATTN_BLOCK:
+        # checkpoint: the chunk scan must RECOMPUTE its probabilities in the
+        # backward pass (flash-attention's trick); without this the scan
+        # stacks per-chunk fp32 probs = the full S^2 tensor again
+        return jax.checkpoint(lambda q, k, v: _attend_blocked(q, k, v, **kw))(q, k, v)
+    return _attend_naive(q, k, v, **kw)
+
+
+def apply_attn(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    c: AttnConfig,
+    *,
+    positions: jax.Array,  # (S,) int32 absolute positions of x
+    kv_source: Optional[jax.Array] = None,  # cross-attention source
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"k","v"} (B, S_max, KV, D)
+    cache_len: Optional[jax.Array] = None,  # () int32 tokens already cached
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, _ = x.shape
+    h, kv, hd = c.n_heads, c.n_kv_heads, c.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = v = None
+    if not (c.cross and cache is not None):  # cross-decode reads cached enc KV
+        src = kv_source if c.cross else x
+        k = (src @ p["wk"]).reshape(B, src.shape[1], kv, hd)
+        v = (src @ p["wv"]).reshape(B, src.shape[1], kv, hd)
+    if c.qk_norm:
+        q = apply_rmsnorm(p["q_norm"], q)
+        if k is not None:
+            k = apply_rmsnorm(p["k_norm"], k)
+    if not c.cross:
+        q = rope(q, positions, c.rope_theta)
+        k = rope(k, positions, c.rope_theta)
+
+    new_cache = None
+    if cache is not None and not c.cross:
+        # decode: append to cache, attend over the valid prefix
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+        new_cache = {"k": k_all, "v": v_all}
+        k_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+        out = _attend(
+            q,
+            k_all,
+            v_all,
+            q_pos=positions,
+            k_pos=k_pos,
+            causal=c.causal,
+            window=c.window,
+            cap=c.attn_softcap,
+            k_len=cache_len + S,
+        )
+    elif cache is not None and c.cross:
+        # cross-attention cache holds the projected encoder kv, computed once
+        out = _attend(
+            q,
+            cache["k"],
+            cache["v"],
+            q_pos=positions,
+            k_pos=jnp.arange(cache["k"].shape[1], dtype=jnp.int32),
+            causal=False,
+            window=None,
+            cap=c.attn_softcap,
+        )
+        new_cache = cache
+    else:
+        k_pos = positions if positions.ndim == 1 else positions[0]
+        out = _attend(
+            q,
+            k,
+            v,
+            q_pos=positions,
+            k_pos=jnp.arange(src.shape[1], dtype=jnp.int32) if c.cross else k_pos,
+            causal=c.causal and not c.cross,
+            window=c.window,
+            cap=c.attn_softcap,
+        )
+    y = out.reshape(B, S, h * hd).astype(x.dtype) @ p["wo"]
+    return y, new_cache
+
+
+def cross_kv(p: Params, enc_out: jax.Array, c: AttnConfig) -> Dict[str, jax.Array]:
+    """Precompute the cross-attention KV from encoder output (cached once)."""
+    B, S, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S, c.n_kv_heads, c.head_dim)
+    v = (enc_out @ p["wv"]).reshape(B, S, c.n_kv_heads, c.head_dim)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora: int = 1536
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    rope_theta: float = 10_000.0
+
+
+def mla_defs(c: MLAConfig) -> Params:
+    h = c.n_heads
+    return {
+        "wq_a": pdef((c.d_model, c.q_lora), ("embed", None)),
+        "q_norm": rmsnorm_defs(c.q_lora),
+        "wq_b": pdef(
+            (c.q_lora, h * (c.d_nope + c.d_rope)), (None, "heads"),
+            granularity=(1, c.d_nope + c.d_rope),
+        ),
+        "wkv_a": pdef((c.d_model, c.kv_lora + c.d_rope), ("embed", None)),
+        "kv_norm": rmsnorm_defs(c.kv_lora),
+        "wk_b": pdef((c.kv_lora, h * c.d_nope), (None, "heads"), granularity=(1, c.d_nope)),
+        "wv_b": pdef((c.kv_lora, h * c.d_v), (None, "heads"), granularity=(1, c.d_v)),
+        "wo": pdef((h * c.d_v, c.d_model), ("heads", "embed"), granularity=(c.d_v, 1)),
+    }
+
+
+def apply_mla(
+    p: Params,
+    x: jax.Array,
+    c: MLAConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"ckv": (B, S_max, kv_lora + d_rope)}
+    cache_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, _ = x.shape
+    h = c.n_heads
+    # queries
+    q = apply_rmsnorm(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, S, h, c.d_nope + c.d_rope)
+    q_nope, q_rope = q[..., : c.d_nope], q[..., c.d_nope :]
+    q_rope = rope(q_rope, positions, c.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    # compressed kv: the ONLY thing cached (MLA's memory saving)
+    ckv_full = x @ p["wkv_a"]  # (B, S, kv_lora + d_rope)
+    ckv, k_rope = ckv_full[..., : c.kv_lora], ckv_full[..., c.kv_lora :]
+    ckv = apply_rmsnorm(p["kv_norm"], ckv)
+    k_rope = rope(k_rope[:, :, None, :], positions, c.rope_theta)[:, :, 0, :]
+    packed = jnp.concatenate([ckv, k_rope], axis=-1)
+
+    new_cache = None
+    if cache is not None:
+        packed = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], packed.astype(cache["ckv"].dtype), cache_len, axis=1
+        )
+        new_cache = {"ckv": packed}
+        k_len = cache_len + S
+    else:
+        k_len = None
+
+    ckv_all = packed[..., : c.kv_lora]
+    k_rope_all = packed[..., c.kv_lora :]
+    Sk = packed.shape[1]
+    # expand compressed kv (absorbed-matmul variant is a perf iteration)
+    k_nope = (ckv_all @ p["wk_b"]).reshape(B, Sk, h, c.d_nope)
+    v = (ckv_all @ p["wv_b"]).reshape(B, Sk, h, c.d_v)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all[:, :, None, :], (B, Sk, h, c.d_rope))], axis=-1
+    )
+    out = _attend(
+        q,
+        k,
+        v if c.d_v == c.d_nope + c.d_rope else jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, c.d_nope + c.d_rope - c.d_v))),
+        q_pos=positions,
+        k_pos=jnp.arange(Sk, dtype=jnp.int32),
+        causal=True,
+        window=None,
+        cap=None,
+        k_len=k_len,
+    )[..., : c.d_v]
+    y = out.reshape(B, S, h * c.d_v).astype(x.dtype) @ p["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_defs(d: int, f: int, kind: str) -> Params:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": pdef((d, f), ("embed", "ff")),
+            "w_up": pdef((d, f), ("embed", "ff")),
+            "w_down": pdef((f, d), ("ff", "embed")),
+        }
+    return {
+        "w_in": pdef((d, f), ("embed", "ff")),
+        "b_in": pdef((f,), ("ff",), init="zeros"),
+        "w_out": pdef((f, d), ("ff", "embed")),
+        "b_out": pdef((d,), (None,), init="zeros"),
+    }
+
+
+def apply_ffn(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return (jax.nn.gelu(x @ p["w_in"] + p["b_in"])) @ p["w_out"] + p["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_ff: int
+    n_shared: int = 0  # shared experts (deepseek-v2)
+    shared_ff: int = 0
+    dense_residual: bool = False  # parallel dense FFN branch (arctic)
+    dense_ff: int = 0
+    capacity_factor: float = 1.25
+
+
+def moe_defs(d: int, c: MoEConfig, ffn_kind: str = "swiglu") -> Params:
+    p: Params = {
+        "router": pdef((d, c.n_experts), ("embed", None), scale=0.1),
+        "w_gate": pdef((c.n_experts, d, c.expert_ff), ("experts", "embed", "ff")),
+        "w_up": pdef((c.n_experts, d, c.expert_ff), ("experts", "embed", "ff")),
+        "w_down": pdef((c.n_experts, c.expert_ff, d), ("experts", "ff", "embed")),
+    }
+    if c.n_shared > 0:
+        p["shared"] = ffn_defs(d, c.shared_ff or c.expert_ff * c.n_shared, ffn_kind)
+    if c.dense_residual:
+        p["dense"] = ffn_defs(d, c.dense_ff or c.expert_ff, ffn_kind)
+    return p
+
+
+def apply_moe(p: Params, x: jax.Array, c: MoEConfig, ffn_kind: str = "swiglu") -> jax.Array:
+    """GShard-style GROUPED capacity dispatch: einsum one-hots, static shapes.
+
+    x: (B, S, d). Each sequence is a dispatch group (GShard's 'groups'):
+    capacity = ceil(cf * k * S / E) **per group**. Ungrouped dispatch over the
+    global token batch makes capacity O(total tokens) and the dispatch
+    einsums quadratic in it — the dry-run roofline measured 100x the model
+    FLOPs on deepseek-v2 before this grouping (EXPERIMENTS.md SPerf).
+    Groups stay sharded over (pod, data); experts over the model axis, so
+    dispatch lowers to an all-to-all-like collective under GSPMD.
+    """
+    B, S, d = x.shape
+    cap = max(c.top_k, int(c.capacity_factor * c.top_k * S / c.n_experts))
+
+    logits = (x @ p["router"]).astype(jnp.float32)  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, c.top_k)  # (B, S, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(top_e, c.n_experts, dtype=jnp.float32)  # (B, S, k, E)
+    # position of each (token, slot) within its expert's per-group buffer
+    flat = onehot.reshape(B, S * c.top_k, c.n_experts)
+    pos = (jnp.cumsum(flat, axis=1) - 1.0).reshape(B, S, c.top_k, c.n_experts)
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    # dispatch: (B, S, k, E) x (B, S, k, E, cap) -> (B, S, E, cap)
+    dispatch = jnp.einsum("bske,bskec->bsec", onehot, pos_oh)
+    combine = jnp.einsum("bsk,bske,bskec->bsec", top_p, onehot, pos_oh)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x.astype(jnp.float32)).astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["w_up"]
+    )
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y = jnp.einsum("bsec,becd->bsd", combine, ye.astype(jnp.float32)).astype(x.dtype)
+    if c.n_shared > 0:
+        y = y + apply_ffn(p["shared"], x, ffn_kind)
+    if c.dense_residual:
+        y = y + apply_ffn(p["dense"], x, ffn_kind)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    width: int  # recurrence width (channels)
+    conv_width: int = 4
+    c_const: float = 8.0
+    use_kernel: bool = True
+    # Griffin uses BLOCK-DIAGONAL gate matrices (one block per head); the
+    # dense variant is our conservative baseline — block-diagonal gates
+    # remove the cross-shard contraction entirely (SPerf iteration).
+    block_diag_gates: bool = False
+    n_gate_blocks: int = 1
+
+
+def rglru_defs(c: RGLRUConfig) -> Params:
+    d, r = c.d_model, c.width
+    p = {
+        "w_x": pdef((d, r), ("embed", "ff")),
+        "w_gate": pdef((d, r), ("embed", "ff")),
+        "conv_k": pdef((c.conv_width, r), (None, "ff"), scale=0.5),
+        "conv_b": pdef((r,), ("ff",), init="zeros"),
+        "b_rg": pdef((r,), ("ff",), init="zeros"),
+        "b_ig": pdef((r,), ("ff",), init="zeros"),
+        "lam": pdef((r,), ("ff",), init="normal", scale=1.0, dtype=jnp.float32),
+        "w_out": pdef((r, d), ("ff", "embed")),
+    }
+    if c.block_diag_gates:
+        nb = c.n_gate_blocks
+        rb = r // nb
+        # gate blocks sharded at block granularity on dim 0 (contraction
+        # stays shard-local when the channel sharding aligns to blocks)
+        p["w_rg"] = pdef((nb, rb, rb), ("ff", None, None), scale=0.5)
+        p["w_ig"] = pdef((nb, rb, rb), ("ff", None, None), scale=0.5)
+    else:
+        p["w_rg"] = pdef((r, r), ("ff", None), scale=0.5)  # recurrence gate
+        p["w_ig"] = pdef((r, r), ("ff", None), scale=0.5)  # input gate
+    return p
+
+
+def _gate_matmul(u: jax.Array, w: jax.Array, c: RGLRUConfig) -> jax.Array:
+    if not c.block_diag_gates:
+        return u @ w
+    nb = c.n_gate_blocks
+    B, S, r = u.shape
+    ub = u.reshape(B, S, nb, r // nb)
+    return jnp.einsum("bsnr,nre->bsne", ub, w).reshape(B, S, r)
+
+
+def _causal_conv1d(x: jax.Array, k: jax.Array, b: jax.Array, state: Optional[jax.Array] = None):
+    """x: (B, S, r); k: (W, r) depthwise. state: (B, W-1, r) trailing inputs."""
+    W = k.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, r)
+    out = sum(xp[:, i : i + x.shape[1], :] * k[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1) :, :]
+    return out.astype(x.dtype), new_state
+
+
+def apply_rglru(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    c: RGLRUConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,  # {"h": (B, r), "conv": (B, W-1, r)}
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    gate = jax.nn.gelu(x @ p["w_gate"])  # (B, S, r)
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv1d(u, p["conv_k"], p["conv_b"], cache["conv"] if cache else None)
+
+    r_gate = jax.nn.sigmoid(_gate_matmul(u, p["w_rg"], c) + p["b_rg"]).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(_gate_matmul(u, p["w_ig"], c) + p["b_ig"]).astype(jnp.float32)
+    log_a = -c.c_const * jax.nn.softplus(p["lam"]) * r_gate  # (B, S, r) in fp32
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i_gate * u.astype(jnp.float32)
+    )
+
+    h0 = cache["h"].astype(jnp.float32) if cache else jnp.zeros(
+        (x.shape[0], c.width), jnp.float32
+    )
+    if c.use_kernel:
+        from repro.kernels.rglru.ops import linear_scan
+
+        h = linear_scan(a, gated_in, h0)
+    else:
+        from repro.kernels.rglru.ref import linear_scan_ref
+
+        h = linear_scan_ref(a, gated_in, h0)
+
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1, :].astype(cache["h"].dtype), "conv": conv_state}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    expansion: int = 2  # mLSTM up-projection factor
+    chunk: int = 64  # chunkwise-recurrent block length (mLSTM)
+
+
+def mlstm_defs(c: XLSTMConfig) -> Params:
+    d = c.d_model
+    di = c.expansion * d
+    return {
+        "w_up": pdef((d, 2 * di), ("embed", "ff")),
+        "wq": pdef((di, di), ("ff", None)),
+        "wk": pdef((di, di), ("ff", None)),
+        "wv": pdef((di, di), ("ff", None)),
+        "w_if": pdef((di, 2 * c.n_heads), ("ff", None), scale=0.1),  # i/f gate logits
+        "b_if": pdef((2 * c.n_heads,), (None,), init="zeros"),
+        "norm": rmsnorm_defs(di),
+        "w_down": pdef((di, d), ("ff", "embed")),
+    }
+
+
+def apply_mlstm(
+    p: Params,
+    x: jax.Array,  # (B, S, d)
+    c: XLSTMConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    # cache: {"C": (B, H, dh, dh), "n": (B, H, dh), "m": (B, H)}
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    di = c.expansion * d
+    H = c.n_heads
+    dh = di // H
+    up = x @ p["w_up"]
+    u, z = up[..., :di], up[..., di:]
+    q = (u @ p["wq"]).reshape(B, S, H, dh)
+    k = (u @ p["wk"]).reshape(B, S, H, dh) / math.sqrt(dh)
+    v = (u @ p["wv"]).reshape(B, S, H, dh)
+    gates = (u @ p["w_if"] + p["b_if"]).astype(jnp.float32)  # (B, S, 2H)
+    log_i = gates[..., :H]  # exponential input gate (log space)
+    log_f = jax.nn.log_sigmoid(gates[..., H:])  # forget gate
+
+    def step(carry, t):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        kt, vt, qt = k[:, t], v[:, t], q[:, t]
+        C = fg[..., None, None] * C + ig[..., None, None] * jnp.einsum("bhd,bhe->bhde", vt, kt)
+        n = fg[..., None] * n + ig[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt.astype(jnp.float32))), 1.0)
+        h = (num / den[..., None]).astype(x.dtype)
+        return (C, n, m_new), h
+
+    if cache is not None:
+        carry0 = (
+            cache["C"].astype(jnp.float32),
+            cache["n"].astype(jnp.float32),
+            cache["m"].astype(jnp.float32),
+        )
+    else:
+        carry0 = (
+            jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32),
+        )
+    (C, n, m), hs = jax.lax.scan(step, carry0, jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)  # (B, S, H, dh) -> flat
+    h = apply_rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    y = h @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "C": C.astype(cache["C"].dtype),
+            "n": n.astype(cache["n"].dtype),
+            "m": m.astype(cache["m"].dtype),
+        }
+    return y, new_cache
+
+
+def slstm_defs(c: XLSTMConfig) -> Params:
+    d = c.d_model
+    H = c.n_heads
+    dh = d // H
+    p = {
+        "w_gates": pdef((d, 4 * d), ("embed", "ff")),  # i, f, z, o pre-activations
+        "b_gates": pdef((4 * d,), (None,), init="zeros"),
+        "r_gates": pdef((H, dh, 4 * dh), (None, None, None), scale=0.5),  # block-diag recurrent
+        "norm": rmsnorm_defs(d),
+        "w_out": pdef((d, d), ("embed", None)),
+    }
+    return p
+
+
+def apply_slstm(
+    p: Params,
+    x: jax.Array,
+    c: XLSTMConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    # cache: {"c": (B, d), "n": (B, d), "m": (B, d), "h": (B, d)}
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d = x.shape
+    H = c.n_heads
+    dh = d // H
+    pre = x @ p["w_gates"] + p["b_gates"]  # (B, S, 4d)
+
+    def step(carry, t):
+        cst, nst, mst, hst = carry  # (B,d) each, fp32
+        rec = jnp.einsum(
+            "bhd,hde->bhe", hst.reshape(B, H, dh).astype(x.dtype), p["r_gates"]
+        ).reshape(B, 4 * d)
+        g = (pre[:, t] + rec).astype(jnp.float32)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + mst, gi)
+        ig = jnp.exp(gi - m_new)
+        fg = jnp.exp(jax.nn.log_sigmoid(gf) + mst - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c_new = fg * cst + ig * z
+        n_new = fg * nst + ig
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new.astype(x.dtype)
+
+    if cache is not None:
+        carry0 = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "m", "h"))
+    else:
+        zero = jnp.zeros((B, d), jnp.float32)
+        carry0 = (zero, zero, jnp.full((B, d), -1e30, jnp.float32), zero)
+    carry, hs = jax.lax.scan(step, carry0, jnp.arange(S))
+    h = jnp.moveaxis(hs, 0, 1)  # (B, S, d)
+    y = apply_rmsnorm(p["norm"], h) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        cst, nst, mst, hst = carry
+        new_cache = {
+            "c": cst.astype(cache["c"].dtype),
+            "n": nst.astype(cache["n"].dtype),
+            "m": mst.astype(cache["m"].dtype),
+            "h": hst.astype(cache["h"].dtype),
+        }
+    return y, new_cache

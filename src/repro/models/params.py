@@ -1,0 +1,184 @@
+"""Parameter declaration system: shapes + logical sharding axes in one tree.
+
+A model definition builds a pytree of ``ParamDef`` leaves. From that single
+tree we derive:
+
+* ``materialize(key, tree)``   — real initialized arrays (smoke tests, examples)
+* ``abstract(tree)``           — ShapeDtypeStructs (dry-run lowering, no memory)
+* ``specs(tree, rules, mesh)`` — PartitionSpecs per leaf from the logical axes
+
+Logical axis names used by the LM stack:
+  "embed"   model width dim          -> FSDP-sharded over the data axis
+  "ff"      feed-forward hidden      -> tensor-parallel over the model axis
+  "heads"   flattened head*head_dim  -> tensor-parallel over the model axis
+  "kv"      flattened kv*head_dim    -> tensor-parallel over the model axis
+  "vocab"   vocabulary               -> tensor-parallel over the model axis
+  "experts" MoE expert count         -> expert-parallel over the model axis
+  "layers"  stacked layer dim        -> never sharded (scan axis)
+  None      replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim, len == len(shape)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0  # stddev multiplier for "normal" (fan-in scaled)
+    dtype: Any = jnp.bfloat16
+    # sharding granularity per dim: a mesh axis may shard dim d only if
+    # (shape[d] / granularity[d]) % axis_size == 0. Head dims set this to
+    # head_dim so sharding never crosses a head boundary (element-sharded
+    # heads produce pathological attention collectives).
+    granularity: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if self.granularity is not None:
+            assert len(self.granularity) == len(self.shape)
+
+    def gran(self, i: int) -> int:
+        return 1 if self.granularity is None else self.granularity[i]
+
+
+def pdef(shape, axes, init="normal", scale=1.0, dtype=jnp.bfloat16, granularity=None) -> ParamDef:
+    return ParamDef(
+        tuple(int(s) for s in shape), tuple(axes), init, scale, dtype,
+        tuple(granularity) if granularity is not None else None,
+    )
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map_defs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_def)
+
+
+def abstract(tree):
+    return _tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def materialize(key: jax.Array, tree, dtype_override=None):
+    """Initialize real arrays. Deterministic per-leaf folding of the key."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_def)
+    out = []
+    for i, d in enumerate(leaves):
+        dt = dtype_override or d.dtype
+        k = jax.random.fold_in(key, i)
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / math.sqrt(max(fan_in, 1))
+            out.append((std * jax.random.normal(k, d.shape, jnp.float32)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# -- sharding rules --------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> candidate mesh axes; the first candidate whose axes all
+    exist in the mesh AND evenly divide the dim wins."""
+
+    rules: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+        ("embed", ("data", None)),  # FSDP / ZeRO-3 analogue
+        ("ff", ("model", None)),  # tensor parallel
+        ("heads", ("model", None)),
+        ("kv", ("model", None)),
+        ("vocab", ("model", "data", None)),
+        ("experts", ("model", None)),  # expert parallel
+        ("batch", (("pod", "data"), "data", None)),  # data parallel (+pod)
+        ("act_seq", (None,)),  # cache sequence dim; 'model' = flash-decode shard
+        ("layers", (None,)),
+    )
+
+    def lookup(self, logical: Optional[str]) -> Tuple[Any, ...]:
+        if logical is None:
+            return (None,)
+        for name, cands in self.rules:
+            if name == logical:
+                return cands
+        return (None,)
+
+    def replace(self, logical: str, cands: Tuple[Any, ...]) -> "ShardingRules":
+        new = tuple(
+            (n, cands if n == logical else c) for (n, c) in self.rules
+        )
+        if logical not in [n for n, _ in self.rules]:
+            new = new + ((logical, cands),)
+        return ShardingRules(rules=new)
+
+
+def _axes_in_mesh(mesh, axis) -> bool:
+    flat = axis if isinstance(axis, tuple) else (axis,)
+    return all(a in mesh.shape for a in flat)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def spec_for(d: ParamDef, rules: ShardingRules, mesh) -> P:
+    parts = []
+    used = set()
+    for i, (dim, logical) in enumerate(zip(d.shape, d.axes)):
+        chosen = None
+        units = dim // d.gran(i)  # shardable units (e.g. heads, not elements)
+        for cand in rules.lookup(logical):
+            if cand is None:
+                chosen = None
+                break
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if not _axes_in_mesh(mesh, cand):
+                continue
+            if any(a in used for a in flat):
+                continue
+            if units % _axis_size(mesh, cand) == 0:
+                chosen = cand
+                used.update(flat)
+                break
+        parts.append(chosen)
+    return P(*parts)
+
+
+def specs(tree, rules: ShardingRules, mesh):
+    return _tree_map_defs(lambda d: spec_for(d, rules, mesh), tree)
+
+
+def shardings(tree, rules: ShardingRules, mesh):
+    from jax.sharding import NamedSharding
+
+    return _tree_map_defs(lambda d: NamedSharding(mesh, spec_for(d, rules, mesh)), tree)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def bytes_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) * np.dtype(d.dtype).itemsize for d in leaves))

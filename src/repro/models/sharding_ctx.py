@@ -1,0 +1,85 @@
+"""Activation-sharding context for the LM stack.
+
+GSPMD propagates parameter shardings into activations; with FSDP-style
+(data-axis) parameter sharding the propagation is ambiguous — the partitioner
+may put the data axis on a *feature* dim of activations instead of the batch
+dim, triggering involuntary full rematerialization (observed: 437 GB/chip
+temp on whisper train_4k; see EXPERIMENTS.md SPerf iteration 1).
+
+The drivers install the mesh here; ``forward`` then pins activations to
+batch-over-(pod, data) at block boundaries. When no mesh is installed (smoke
+tests, single device) every constraint is a no-op.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH = None
+_SEQ_PARALLEL = False  # shard dim 1 (sequence) of 3D activations over 'model'
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def set_seq_parallel(on: bool) -> None:
+    global _SEQ_PARALLEL
+    _SEQ_PARALLEL = on
+
+
+@contextmanager
+def use_mesh(mesh, seq_parallel: bool = False):
+    global _MESH, _SEQ_PARALLEL
+    prev, prev_sp = _MESH, _SEQ_PARALLEL
+    _MESH, _SEQ_PARALLEL = mesh, seq_parallel
+    try:
+        yield
+    finally:
+        _MESH, _SEQ_PARALLEL = prev, prev_sp
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim 0 to the data-parallel axes (divisibility-checked). With
+    sequence parallelism on, dim 1 of 3D activations is additionally pinned
+    to the model axis (Megatron-SP: the per-layer saved residual stream and
+    all elementwise/norm work shard 16x). No-op without an installed mesh."""
+    if _MESH is None:
+        return x
+    axes = _batch_axes(_MESH)
+    if not axes:
+        return x
+    size = int(np.prod([_MESH.shape[a] for a in axes]))
+    if x.shape[0] % size != 0:
+        return x
+    rest = [None] * (x.ndim - 1)
+    if (
+        _SEQ_PARALLEL
+        and x.ndim == 3
+        and "model" in _MESH.shape
+        and x.shape[1] % _MESH.shape["model"] == 0
+    ):
+        rest[0] = "model"
+    spec = P(axes if len(axes) > 1 else axes[0], *rest)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def constrain(x: jax.Array, *spec_parts) -> jax.Array:
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*spec_parts)))

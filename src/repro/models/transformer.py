@@ -1,0 +1,514 @@
+"""Generic transformer assembly covering all ten assigned architectures.
+
+A model is a prefix + repeated group pattern + suffix of *blocks*; the group
+pattern is stacked and scanned (``lax.scan``) with optional remat, which keeps
+the lowered HLO small even for 95-layer stacks. Block kinds:
+
+  "attn"     global attention + FFN           (internlm2, qwen3, deepseek-67b,
+                                               internvl2 backbone)
+  "local"    sliding-window attention + FFN   (gemma2, recurrentgemma)
+  "global"   global attention + FFN w/ gemma2 sandwich norms + softcaps
+  "moe"      global attention + MoE           (arctic: + dense residual)
+  "mla"      MLA attention + dense FFN        (deepseek-v2 first layer)
+  "mla_moe"  MLA attention + MoE              (deepseek-v2)
+  "rec"      RG-LRU recurrent block + FFN     (recurrentgemma)
+  "mlstm"/"slstm"  xLSTM blocks (no separate FFN; d_ff = 0)
+  "enc"      bidirectional attention + FFN    (whisper encoder)
+  "dec"      causal self-attn + cross-attn + FFN (whisper decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.params import ParamDef, pdef
+from repro.models.sharding_ctx import constrain_batch
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # layer structure
+    prefix: Tuple[str, ...] = ()
+    pattern: Tuple[str, ...] = ("attn",)
+    n_groups: int = 1
+    suffix: Tuple[str, ...] = ()
+    # attention details
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    # families
+    mla: Optional[B.MLAConfig] = None
+    moe: Optional[B.MoEConfig] = None
+    rnn_width: Optional[int] = None
+    conv_width: int = 4
+    xlstm: Optional[B.XLSTMConfig] = None
+    # ffn / embeddings
+    ffn_kind: str = "swiglu"
+    tie_embeddings: bool = False
+    emb_scale: bool = False
+    norm_eps: float = 1e-6
+    # enc-dec (whisper): encoder stack runs first; None = decoder-only
+    enc_pattern: Optional[Tuple[str, ...]] = None
+    enc_groups: int = 0
+    enc_positions: str = "rope"  # rope | sinusoidal
+    # modality frontend stub
+    frontend: str = "none"  # none | vision | audio
+    vis_len: int = 0  # visual prefix length (vlm)
+    # remat policy for the group scan: none | full | dots
+    remat: str = "full"
+    # use the Pallas linear-scan kernel inside RG-LRU blocks
+    use_rglru_kernel: bool = False
+    # Griffin-style block-diagonal RG-LRU gate matrices (SPerf iteration)
+    rg_blockdiag: bool = False
+    # lax.scan over layer groups (False = python loop, fully inlined HLO;
+    # used by the dry-run's delta-corrected roofline lowering)
+    scan_layers: bool = True
+
+    def n_layers(self) -> int:
+        return (
+            len(self.prefix)
+            + self.n_groups * len(self.pattern)
+            + len(self.suffix)
+            + self.enc_groups * len(self.enc_pattern or ())
+        )
+
+    def attn_cfg(self, kind: str) -> B.AttnConfig:
+        return B.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            qk_norm=self.qk_norm,
+            attn_softcap=self.attn_softcap,
+            window=self.window if kind == "local" else None,
+            causal=kind != "enc",
+            rope_theta=self.rope_theta,
+            cross=False,
+        )
+
+    def cross_cfg(self) -> B.AttnConfig:
+        return dataclasses.replace(self.attn_cfg("dec"), cross=True, causal=False)
+
+    def rglru_cfg(self) -> B.RGLRUConfig:
+        return B.RGLRUConfig(
+            d_model=self.d_model,
+            width=self.rnn_width or self.d_model,
+            conv_width=self.conv_width,
+            use_kernel=self.use_rglru_kernel,
+            block_diag_gates=self.rg_blockdiag,
+            n_gate_blocks=self.n_heads if self.rg_blockdiag else 1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# block definitions
+# ---------------------------------------------------------------------------
+
+_SANDWICH = ("global", "local")  # gemma2-style pre+post norms
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Params:
+    d = cfg.d_model
+    p: Params = {"norm1": B.rmsnorm_defs(d)}
+    if kind in ("attn", "local", "global", "moe", "enc", "dec"):
+        p["attn"] = B.attn_defs(cfg.attn_cfg(kind))
+    elif kind in ("mla", "mla_moe"):
+        p["attn"] = B.mla_defs(cfg.mla)
+    elif kind == "rec":
+        p["rec"] = B.rglru_defs(cfg.rglru_cfg())
+    elif kind == "mlstm":
+        p["mix"] = B.mlstm_defs(cfg.xlstm)
+        return p  # xLSTM blocks: mixer only
+    elif kind == "slstm":
+        p["mix"] = B.slstm_defs(cfg.xlstm)
+        return p
+    else:
+        raise ValueError(kind)
+
+    if kind == "dec":
+        p["norm_c"] = B.rmsnorm_defs(d)
+        p["cross"] = B.attn_defs(cfg.cross_cfg())
+
+    p["norm2"] = B.rmsnorm_defs(d)
+    if kind in ("moe", "mla_moe"):
+        p["moe"] = B.moe_defs(d, cfg.moe, cfg.ffn_kind)
+    else:
+        p["ffn"] = B.ffn_defs(d, cfg.d_ff, cfg.ffn_kind)
+    if kind in _SANDWICH and cfg.name.startswith("gemma2"):
+        p["post_norm1"] = B.rmsnorm_defs(d)
+        p["post_norm2"] = B.rmsnorm_defs(d)
+    return p
+
+
+def cache_defs(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> Params:
+    """Decode-cache ParamDefs for one block (shapes + sharding axes)."""
+    kvd = cfg.n_kv_heads * 0 + cfg.head_dim
+    if kind in ("attn", "global", "moe", "enc"):
+        shp = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("batch", "act_seq", "kv", None)
+        return {"k": pdef(shp, ax, init="zeros"), "v": pdef(shp, ax, init="zeros")}
+    if kind == "local":
+        s = min(max_seq, (cfg.window or max_seq))
+        # window cache is allocated at full window size (ring indexing is a
+        # perf iteration; baseline keeps the simple full buffer when short)
+        shp = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("batch", "act_seq", "kv", None)
+        return {"k": pdef(shp, ax, init="zeros"), "v": pdef(shp, ax, init="zeros")}
+    if kind in ("mla", "mla_moe"):
+        m = cfg.mla
+        return {
+            "ckv": pdef(
+                (batch, max_seq, m.kv_lora + m.d_rope),
+                ("batch", "act_seq", None),
+                init="zeros",
+            )
+        }
+    if kind == "rec":
+        r = cfg.rnn_width or cfg.d_model
+        return {
+            "h": pdef((batch, r), ("batch", "ff"), init="zeros", dtype=jnp.float32),
+            "conv": pdef((batch, cfg.conv_width - 1, r), ("batch", None, "ff"), init="zeros"),
+        }
+    if kind == "mlstm":
+        x = cfg.xlstm
+        di = x.expansion * cfg.d_model
+        dh = di // x.n_heads
+        return {
+            "C": pdef((batch, x.n_heads, dh, dh), ("batch", "heads", None, None), init="zeros", dtype=jnp.float32),
+            "n": pdef((batch, x.n_heads, dh), ("batch", "heads", None), init="zeros", dtype=jnp.float32),
+            "m": pdef((batch, x.n_heads), ("batch", None), init="zeros", dtype=jnp.float32),
+        }
+    if kind == "slstm":
+        d = cfg.d_model
+        z = {"c": None, "n": None, "m": None, "h": None}
+        return {
+            k: pdef((batch, d), ("batch", "ff"), init="zeros", dtype=jnp.float32) for k in z
+        }
+    if kind == "dec":
+        shp = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        ax = ("batch", "act_seq", "kv", None)
+        enc_len = 1500  # whisper native encoder frames
+        xshp = (batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "k": pdef(shp, ax, init="zeros"),
+            "v": pdef(shp, ax, init="zeros"),
+            "xk": pdef(xshp, ax, init="zeros"),
+            "xv": pdef(xshp, ax, init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def model_defs(cfg: ModelConfig) -> Params:
+    """Full parameter tree (ParamDefs) for a model config."""
+    d, v = cfg.d_model, cfg.vocab
+    p: Params = {
+        "embed": pdef((v, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": B.rmsnorm_defs(d),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = pdef((d, v), ("embed", "vocab"))
+    if cfg.enc_pattern:
+        p["enc_groups"] = _stack_defs(
+            {f"b{i}": block_defs(cfg, k) for i, k in enumerate(cfg.enc_pattern)}, cfg.enc_groups
+        )
+        p["enc_norm"] = B.rmsnorm_defs(d)
+    if cfg.prefix:
+        p["prefix"] = [block_defs(cfg, k) for k in cfg.prefix]
+    if cfg.n_groups > 0:
+        p["groups"] = _stack_defs(
+            {f"b{i}": block_defs(cfg, k) for i, k in enumerate(cfg.pattern)}, cfg.n_groups
+        )
+    if cfg.suffix:
+        p["suffix"] = [block_defs(cfg, k) for k in cfg.suffix]
+    return p
+
+
+def _stack_defs(tree: Params, n: int) -> Params:
+    def stack(dfn: ParamDef) -> ParamDef:
+        return pdef((n,) + dfn.shape, ("layers",) + dfn.axes, dfn.init, dfn.scale, dfn.dtype)
+
+    return jax.tree_util.tree_map(stack, tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def model_cache_defs(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    c: Params = {}
+    if cfg.prefix:
+        c["prefix"] = [cache_defs(cfg, k, batch, max_seq) for k in cfg.prefix]
+    if cfg.n_groups > 0:
+        c["groups"] = _stack_defs(
+            {f"b{i}": cache_defs(cfg, k, batch, max_seq) for i, k in enumerate(cfg.pattern)},
+            cfg.n_groups,
+        )
+    if cfg.suffix:
+        c["suffix"] = [cache_defs(cfg, k, batch, max_seq) for k in cfg.suffix]
+    return c
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def apply_block(
+    p: Params,
+    x: jax.Array,
+    kind: str,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    eps = cfg.norm_eps
+    new_cache: Optional[Params] = None
+    h = B.apply_rmsnorm(p["norm1"], x, eps)
+
+    if kind in ("attn", "local", "global", "moe", "enc", "dec"):
+        sub = {"k": cache["k"], "v": cache["v"]} if cache is not None else None
+        y, nc = B.apply_attn(
+            p["attn"], h, cfg.attn_cfg(kind), positions=positions, cache=sub, cache_len=cache_len
+        )
+        if "post_norm1" in p:
+            y = B.apply_rmsnorm(p["post_norm1"], y, eps)
+        x = x + y
+        if kind == "dec":
+            hc = B.apply_rmsnorm(p["norm_c"], x, eps)
+            if cache is not None:
+                xsub = {"k": cache["xk"], "v": cache["xv"]}
+                yc, _ = B.apply_attn(
+                    p["cross"], hc, cfg.cross_cfg(), positions=positions, cache=xsub
+                )
+            else:
+                yc, _ = B.apply_attn(
+                    p["cross"], hc, cfg.cross_cfg(), positions=positions, kv_source=enc_out
+                )
+            x = x + yc
+        if cache is not None:
+            new_cache = dict(nc)
+            if kind == "dec":
+                new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    elif kind in ("mla", "mla_moe"):
+        y, nc = B.apply_mla(p["attn"], h, cfg.mla, positions=positions, cache=cache, cache_len=cache_len)
+        x = x + y
+        new_cache = nc
+    elif kind == "rec":
+        y, nc = B.apply_rglru(p["rec"], h, cfg.rglru_cfg(), cache=cache)
+        x = x + y
+        new_cache = nc
+    elif kind == "mlstm":
+        y, nc = B.apply_mlstm(p["mix"], h, cfg.xlstm, cache=cache)
+        return x + y, nc
+    elif kind == "slstm":
+        y, nc = B.apply_slstm(p["mix"], h, cfg.xlstm, cache=cache)
+        return x + y, nc
+    else:
+        raise ValueError(kind)
+
+    # FFN / MoE half
+    h2 = B.apply_rmsnorm(p["norm2"], x, eps)
+    if kind in ("moe", "mla_moe"):
+        y2 = B.apply_moe(p["moe"], h2, cfg.moe, cfg.ffn_kind)
+    else:
+        y2 = B.apply_ffn(p["ffn"], h2, cfg.ffn_kind)
+    if "post_norm2" in p:
+        y2 = B.apply_rmsnorm(p["post_norm2"], y2, eps)
+    return x + y2, new_cache
+
+
+def _tree_slice(tree, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    pos = positions.astype(jnp.float32)[:, None]
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    from repro.models.sharding_ctx import get_mesh, constrain
+
+    x = B.apply_rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["head"]
+    logits = B.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    mesh = get_mesh()
+    if mesh is not None and "model" in mesh.shape and cfg.vocab % mesh.shape["model"] == 0:
+        # vocab-parallel logits: the fp32 (B, S, V) tensor stays sharded over
+        # the model axis; the CE logsumexp reduces it with one small all-reduce
+        daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        bax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+        if bax is not None and logits.shape[0] % _mesh_size(mesh, bax) == 0:
+            logits = constrain(logits, bax, *([None] * (logits.ndim - 2)), "model")
+        else:
+            logits = constrain(logits, *([None] * (logits.ndim - 1)), "model")
+    return logits
+
+
+def _mesh_size(mesh, axes) -> int:
+    flat = axes if isinstance(axes, tuple) else (axes,)
+    out = 1
+    for a in flat:
+        out *= mesh.shape[a]
+    return out
+
+
+def run_encoder(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over pre-embedded frames (conv frontend stub)."""
+    S = frames.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = constrain_batch(frames)
+    if cfg.enc_positions == "sinusoidal":
+        x = x + _sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+    def group_fn(x, gp):
+        for i, kind in enumerate(cfg.enc_pattern):
+            x, _ = apply_block(gp[f"b{i}"], x, kind, cfg, positions=positions)
+        return constrain_batch(x), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_remat(group_fn, cfg.remat), x, params["enc_groups"])
+    else:
+        for gi in range(cfg.enc_groups):
+            x, _ = group_fn(x, _tree_slice(params["enc_groups"], gi))
+    return B.apply_rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S)
+    *,
+    vis_embeds: Optional[jax.Array] = None,  # (B, V, d) vlm prefix
+    frames: Optional[jax.Array] = None,  # (B, T_enc, d) whisper encoder input
+    cache: Optional[Params] = None,
+    cache_len: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Returns (logits, new_cache). Training/prefill: cache=None."""
+    x = embed_tokens(params, cfg, tokens)
+    if vis_embeds is not None:
+        x = jnp.concatenate([vis_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_batch(x)
+    S = x.shape[1]
+    if cache_len is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    else:
+        positions = cache_len + jnp.arange(S, dtype=jnp.int32)
+    if cfg.enc_positions == "sinusoidal":
+        x = x + _sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+    enc_out = None
+    if cfg.enc_pattern and frames is not None:
+        enc_out = run_encoder(params, cfg, frames)
+
+    new_cache: Params = {}
+
+    def run_plain(x):
+        # no cache: prefix -> scanned groups -> suffix
+        for i, kind in enumerate(cfg.prefix):
+            x, _ = apply_block(params["prefix"][i], x, kind, cfg, positions=positions, enc_out=enc_out)
+
+        def group_fn(x, gp):
+            for i, kind in enumerate(cfg.pattern):
+                x, _ = apply_block(gp[f"b{i}"], x, kind, cfg, positions=positions, enc_out=enc_out)
+            return constrain_batch(x), None
+
+        if cfg.n_groups > 0:
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(_remat(group_fn, cfg.remat), x, params["groups"])
+            else:
+                for gi in range(cfg.n_groups):
+                    x, _ = group_fn(x, _tree_slice(params["groups"], gi))
+        for i, kind in enumerate(cfg.suffix):
+            x, _ = apply_block(params["suffix"][i], x, kind, cfg, positions=positions, enc_out=enc_out)
+        return x
+
+    if cache is None:
+        x = run_plain(x)
+        return unembed(params, cfg, x), None
+
+    # cached decode / prefill-into-cache
+    for i, kind in enumerate(cfg.prefix):
+        x, nc = apply_block(
+            params["prefix"][i], x, kind, cfg,
+            positions=positions, cache=cache["prefix"][i], cache_len=cache_len, enc_out=enc_out,
+        )
+        new_cache.setdefault("prefix", []).append(nc)
+
+    if cfg.n_groups > 0:
+
+        def group_fn(x, scanned):
+            gp, gc = scanned
+            ncs = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, nc = apply_block(
+                    gp[f"b{i}"], x, kind, cfg,
+                    positions=positions, cache=gc[f"b{i}"], cache_len=cache_len, enc_out=enc_out,
+                )
+                ncs[f"b{i}"] = nc
+            return constrain_batch(x), ncs
+
+        if cfg.scan_layers:
+            x, group_caches = jax.lax.scan(group_fn, x, (params["groups"], cache["groups"]))
+        else:
+            caches = []
+            for gi in range(cfg.n_groups):
+                x, nc = group_fn(x, (_tree_slice(params["groups"], gi), _tree_slice(cache["groups"], gi)))
+                caches.append(nc)
+            group_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+        new_cache["groups"] = group_caches
+
+    for i, kind in enumerate(cfg.suffix):
+        x, nc = apply_block(
+            params["suffix"][i], x, kind, cfg,
+            positions=positions, cache=cache["suffix"][i], cache_len=cache_len, enc_out=enc_out,
+        )
+        new_cache.setdefault("suffix", []).append(nc)
+
+    return unembed(params, cfg, x), new_cache

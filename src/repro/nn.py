@@ -1,0 +1,174 @@
+"""Minimal functional NN substrate (no flax/optax in this environment).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every layer is an
+``init(key, ...) -> params`` / ``apply(params, x) -> y`` pair. Used by both the
+COSTREAM GNN and the LM stack.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, object]
+
+
+# -- initializers -------------------------------------------------------------
+
+
+def glorot(key: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = math.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def he(key: jax.Array, shape: Tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[-2]
+    return math.sqrt(2.0 / fan_in) * jax.random.normal(key, shape, dtype)
+
+
+def normal(key: jax.Array, shape: Tuple[int, ...], stddev: float = 0.02, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+# -- dense / MLP ---------------------------------------------------------------
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    kw, _ = jax.random.split(key)
+    return {"w": glorot(kw, (d_in, d_out), dtype), "b": jnp.zeros((d_out,), dtype)}
+
+
+def apply_linear(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def init_mlp(key: jax.Array, sizes: Sequence[int], dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        "layers": [
+            init_linear(k, sizes[i], sizes[i + 1], dtype) for i, k in enumerate(keys)
+        ]
+    }
+
+
+def apply_mlp(
+    p: Params, x: jax.Array, act: Callable[[jax.Array], jax.Array] = jax.nn.relu
+) -> jax.Array:
+    layers = p["layers"]
+    for i, layer in enumerate(layers):
+        x = apply_linear(layer, x)
+        if i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+# -- banked (per-node-type) MLPs ------------------------------------------------
+# A bank stacks T type-specific MLPs as leading-axis weight stacks; application
+# computes all types and selects with a one-hot mask. With T <= 7 this is a
+# masked-matmul — the MXU-friendly formulation (see DESIGN.md SS4); the Pallas
+# kernel in repro.kernels fuses it.
+
+
+def init_mlp_bank(
+    key: jax.Array, n_types: int, sizes: Sequence[int], dtype=jnp.float32
+) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        sub = jax.random.split(k, n_types)
+        w = jnp.stack([glorot(s, (sizes[i], sizes[i + 1]), dtype) for s in sub])
+        b = jnp.zeros((n_types, sizes[i + 1]), dtype)
+        layers.append({"w": w, "b": b})
+    return {"layers": layers}
+
+
+def apply_mlp_bank(
+    p: Params,
+    x: jax.Array,
+    type_onehot: jax.Array,
+    act: Callable[[jax.Array], jax.Array] = jax.nn.relu,
+) -> jax.Array:
+    """x: (..., N, F); type_onehot: (..., N, T) -> (..., N, H).
+
+    Per layer, select each node's type-specific weights via the one-hot:
+    y = x @ W[t(n)] + b[t(n)]. Formulated as T masked GEMMs (rows of the
+    "wrong" type are zeroed before the matmul) — dense, static, MXU-friendly,
+    and much faster than materializing the (N, T, H) bank product.
+    """
+    layers = p["layers"]
+    n_types = layers[0]["w"].shape[0]
+    for i, layer in enumerate(layers):
+        y = type_onehot @ layer["b"]
+        for t in range(n_types):
+            y = y + (x * type_onehot[..., t : t + 1]) @ layer["w"][t]
+        x = act(y) if i < len(layers) - 1 else y
+    return x
+
+
+def apply_mlp_bank_slotted(
+    p: Params,
+    x: jax.Array,
+    slot_ranges: Sequence[Tuple[int, int, int]],
+    act: Callable[[jax.Array], jax.Array] = jax.nn.relu,
+) -> jax.Array:
+    """Banked MLP over a *canonical slot layout*: nodes are pre-sorted so that
+    all nodes of type t live in the static slot range [start, stop).
+
+    ``slot_ranges``: sequence of (type_id, start, stop). Each layer then runs
+    one narrow GEMM per type on its slice — no masking waste at all, and the
+    slices are static (TPU/Pallas-friendly). x: (..., N, F) -> (..., N, H).
+    """
+    layers = p["layers"]
+    for i, layer in enumerate(layers):
+        pieces = []
+        for t, start, stop in slot_ranges:
+            pieces.append(x[..., start:stop, :] @ layer["w"][t] + layer["b"][t])
+        y = jnp.concatenate(pieces, axis=-2)
+        x = act(y) if i < len(layers) - 1 else y
+    return x
+
+
+# -- norms ------------------------------------------------------------------------
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_layernorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# -- misc ---------------------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def cast_floats(params, dtype):
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, params)

@@ -1,0 +1,11 @@
+"""Placement selection with COSTREAM (paper SV) + baselines."""
+
+from repro.placement.enumerate import (
+    enumerate_candidates,
+    heuristic_placement,
+    valid_candidate,
+)
+from repro.placement.optimizer import PlacementOptimizer, OptimizerResult
+from repro.placement.baselines import online_monitoring_run, MonitoringResult
+
+__all__ = [k for k in dir() if not k.startswith("_")]

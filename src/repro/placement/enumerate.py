@@ -1,0 +1,107 @@
+"""Heuristic placement enumeration (paper SV, Fig. 5; after Governor [32]).
+
+Candidates respect three IoT-scenario rules:
+  (1) operator co-location is allowed,
+  (2) data flows from same-or-weaker to stronger hardware bins,
+  (3) placements are acyclic (data never returns to a previously left host).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.dsps.hardware import Cluster, hardware_bin
+from repro.dsps.placement import (
+    Placement,
+    is_acyclic_placement,
+    respects_increasing_capability,
+)
+from repro.dsps.query import OpType, Query
+
+
+def valid_candidate(query: Query, cluster: Cluster, placement: Placement) -> bool:
+    return respects_increasing_capability(query, cluster, placement) and is_acyclic_placement(
+        query, placement
+    )
+
+
+def heuristic_placement(query: Query, cluster: Cluster) -> Placement:
+    """The deterministic initial placement baseline (after [32]).
+
+    Sources go to the weakest bin (edge), each subsequent depth level moves to
+    the next-stronger available node, round-robin within a level. This is the
+    placement the paper compares its optimized placements against (Exp 2a) and
+    the starting point of the monitoring baseline (Exp 2b).
+    """
+    order = np.argsort([(hardware_bin(n), -n.cpu * 0 + n.cpu) for n in cluster.nodes], axis=0)
+    by_strength = sorted(
+        cluster.nodes, key=lambda n: (hardware_bin(n), n.cpu, n.ram_mb, n.bandwidth_mbps)
+    )
+    depths = query.depths()
+    max_d = max(depths.values())
+    assign = [0] * query.n_ops()
+    n = len(by_strength)
+    rr = {}
+    for op in query.operators:
+        d = depths[op.op_id]
+        # map depth range onto node-strength range
+        idx = int(round(d / max(max_d, 1) * (n - 1)))
+        # round-robin among equal-depth operators across neighboring nodes
+        bump = rr.get(d, 0)
+        rr[d] = bump + 1
+        idx = min(n - 1, idx + (bump % 2))
+        assign[op.op_id] = by_strength[idx].node_id
+    p = Placement.of(assign)
+    if not valid_candidate(query, cluster, p):
+        # fall back: everything on the strongest node is always valid
+        p = Placement.of([by_strength[-1].node_id] * query.n_ops())
+    return p
+
+
+def enumerate_candidates(
+    query: Query,
+    cluster: Cluster,
+    k: int,
+    rng: np.random.Generator,
+    max_tries_factor: int = 30,
+) -> List[Placement]:
+    """Sample up to ``k`` distinct rule-respecting placement candidates."""
+    bins = cluster.bins()
+    nodes_by_bin: List[List[int]] = [[], [], []]
+    for i, b in enumerate(bins):
+        nodes_by_bin[b].append(i)
+
+    depths = query.depths()
+    topo = query.topological_order()
+    out: List[Placement] = []
+    seen: Set[Tuple[int, ...]] = set()
+    tries = 0
+    while len(out) < k and tries < k * max_tries_factor:
+        tries += 1
+        assign = [-1] * query.n_ops()
+        ok = True
+        for u in topo:
+            parents = query.parents(u)
+            min_bin = max((bins[assign[p]] for p in parents), default=0)
+            # choose a host with bin >= min_bin, biased towards staying close
+            options = [i for i in range(cluster.n_nodes()) if bins[i] >= min_bin]
+            if not options:
+                ok = False
+                break
+            # co-location bias: reuse a parent's host 40% of the time
+            if parents and rng.random() < 0.4:
+                assign[u] = assign[parents[int(rng.integers(0, len(parents)))]]
+            else:
+                assign[u] = int(options[int(rng.integers(0, len(options)))])
+        if not ok:
+            continue
+        p = Placement.of(assign)
+        if p.assignment in seen:
+            continue
+        if not valid_candidate(query, cluster, p):
+            continue
+        seen.add(p.assignment)
+        out.append(p)
+    return out

@@ -1,0 +1,38 @@
+"""Training substrate: optimizers, data pipeline, loops, checkpointing,
+gradient compression, elastic resharding."""
+
+from repro.training.optim import (
+    adam,
+    adamw,
+    sgd,
+    apply_updates,
+    cosine_schedule,
+    constant_schedule,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.training.batching import (
+    GraphDataset,
+    dataset_from_traces,
+    split_dataset,
+    batches,
+    prefetch,
+)
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.training.compression import (
+    EFState,
+    ef_init,
+    topk_with_error_feedback,
+    int8_quantize,
+    int8_dequantize,
+    int8_roundtrip,
+)
+from repro.training.loop import (
+    TrainConfig,
+    TrainResult,
+    train_cost_model,
+    train_flat_model,
+    predict_flat,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

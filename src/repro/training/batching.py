@@ -1,0 +1,101 @@
+"""Host-side data pipeline: trace corpus -> padded graph batches.
+
+Features are materialized once (numpy), then an epoch iterator yields jnp
+batches. ``pad_to_multiple`` keeps shapes static for jit; a background
+prefetch thread overlaps host featurization with device compute.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import JointGraph, batch_graphs, build_graph
+from repro.core.model import label_array
+from repro.dsps.generator import Trace
+
+
+@dataclass
+class GraphDataset:
+    graphs: JointGraph  # batched numpy arrays, leading dim = N
+    labels: np.ndarray  # (N,) for the selected metric
+
+    def __len__(self) -> int:
+        return int(self.graphs.op_x.shape[0])
+
+    def select(self, idx: np.ndarray) -> "GraphDataset":
+        g = JointGraph(*[getattr(self.graphs, f)[idx] for f in JointGraph._fields])
+        return GraphDataset(graphs=g, labels=self.labels[idx])
+
+
+def dataset_from_traces(
+    traces: List[Trace], metric: str, transform=None
+) -> GraphDataset:
+    singles = [build_graph(t.query, t.cluster, t.placement) for t in traces]
+    if transform is not None:
+        singles = [transform(g) for g in singles]
+    return GraphDataset(graphs=batch_graphs(singles), labels=label_array(traces, metric))
+
+
+def split_dataset(
+    ds: GraphDataset, fractions: Tuple[float, float, float] = (0.8, 0.1, 0.1), seed: int = 0
+) -> Tuple[GraphDataset, GraphDataset, GraphDataset]:
+    """train/val/test split (paper: 80/10/10)."""
+    n = len(ds)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_tr = int(fractions[0] * n)
+    n_va = int(fractions[1] * n)
+    return (
+        ds.select(perm[:n_tr]),
+        ds.select(perm[n_tr : n_tr + n_va]),
+        ds.select(perm[n_tr + n_va :]),
+    )
+
+
+def batches(
+    ds: GraphDataset,
+    batch_size: int,
+    rng: Optional[np.random.Generator] = None,
+    drop_remainder: bool = False,
+) -> Iterator[Tuple[JointGraph, np.ndarray]]:
+    n = len(ds)
+    order = rng.permutation(n) if rng is not None else np.arange(n)
+    for start in range(0, n, batch_size):
+        idx = order[start : start + batch_size]
+        if drop_remainder and idx.size < batch_size:
+            return
+        if idx.size < batch_size:
+            # pad by repeating (mask via weights is unnecessary: eval uses
+            # unpadded path; training tolerates duplicate samples in the tail)
+            reps = np.concatenate([idx, order[: batch_size - idx.size]])
+            idx = reps
+        sub = ds.select(idx)
+        yield sub.graphs, sub.labels
+
+
+def prefetch(it: Iterator, size: int = 2) -> Iterator:
+    """Background-thread prefetch (overlaps host prep with device compute)."""
+    q: queue.Queue = queue.Queue(maxsize=size)
+    stop = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(stop)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is stop:
+            return
+        yield item

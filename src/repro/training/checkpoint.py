@@ -1,0 +1,130 @@
+"""Fault-tolerant checkpointing: atomic pytree snapshots + resume.
+
+Layout: ``<dir>/step_<n>/arrays.npz`` + ``manifest.json``. Writes go to a
+temp directory first and are atomically renamed, so a crash mid-write never
+corrupts the latest checkpoint (restart safety on preemption). A ``latest``
+pointer file is updated last. Non-array state (step counters, RNG keys, mesh
+shape) lives in the manifest for elastic-restart validation.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Atomically persist ``state`` (a pytree) at ``step``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        arrays = dict(_flatten_with_paths(state))
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "keys": sorted(arrays.keys()),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic on same filesystem
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # update the 'latest' pointer last (atomic replace)
+    ptr_tmp = os.path.join(directory, ".latest.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(directory, "latest"))
+    _gc_old(directory, keep)
+    return final
+
+
+def _gc_old(directory: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    ptr = os.path.join(directory, "latest")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        # pointer ahead of a crashed write: fall back to newest complete dir
+        steps = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+        if not steps:
+            return None
+        name = steps[-1]
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(directory: str, like, step: Optional[int] = None):
+    """Restore a pytree of the same structure as ``like``.
+
+    Returns (state, step, extra) or (None, None, None) when nothing exists.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None, None, None
+    path = os.path.join(directory, f"step_{step:010d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for pth, leaf in leaves_with_paths:
+        key = SEP.join(_path_str(p) for p in pth)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {want.shape}")
+        new_leaves.append(arr.astype(want.dtype))
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return state, manifest["step"], manifest.get("extra", {})

@@ -1,0 +1,105 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two schemes usable in the DP all-reduce path (DESIGN.md SS7):
+
+* ``topk``: per-leaf magnitude top-k sparsification with **error feedback**
+  (the residual is carried to the next step, guaranteeing convergence under
+  standard assumptions). The compressed representation is (values, indices);
+  in SPMD the all-reduce moves k values instead of the full leaf.
+* ``int8``: symmetric per-leaf int8 quantization with stochastic rounding;
+  4x fewer bytes on the wire, unbiased in expectation.
+
+Both expose compress/decompress pairs usable inside shard_map (pre/post
+psum), plus an ``EFState`` pytree that is checkpointed with the train state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = object
+
+
+class EFState(NamedTuple):
+    residual: PyTree  # same structure as grads
+
+
+def ef_init(params: PyTree) -> EFState:
+    return EFState(
+        residual=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    )
+
+
+# -- top-k sparsification ------------------------------------------------------------
+
+
+def topk_compress(x: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top ``frac`` fraction of entries by magnitude.
+
+    Returns (values, flat_indices); k is static given the shape.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(frac * flat.size))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    flat = flat.at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+def topk_with_error_feedback(
+    grads: PyTree, ef: EFState, frac: float
+) -> Tuple[PyTree, EFState, float]:
+    """grads -> (sparse-reconstructed grads, new EF state, compression ratio)."""
+
+    def per_leaf(g, r):
+        acc = g.astype(jnp.float32) + r
+        vals, idx = topk_compress(acc, frac)
+        recon = topk_decompress(vals, idx, acc.shape)
+        return recon, acc - recon
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    outs = [per_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    recon = treedef.unflatten([o[0] for o in outs])
+    resid = treedef.unflatten([o[1] for o in outs])
+    return recon, EFState(residual=resid), frac
+
+
+# -- int8 quantization ------------------------------------------------------------------
+
+
+def int8_quantize(
+    x: jax.Array, key: jax.Array, stochastic: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 with stochastic rounding. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    if stochastic:
+        noise = jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+        q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_roundtrip(grads: PyTree, key: jax.Array, stochastic: bool = True) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for g, k in zip(leaves, keys):
+        q, s = int8_quantize(g, k, stochastic)
+        out.append(int8_dequantize(q, s))
+    return treedef.unflatten(out)

@@ -1,0 +1,49 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+On node failure the launcher rebuilds a smaller mesh from surviving hosts and
+resumes from the latest checkpoint; on capacity recovery it grows back. Since
+checkpoints are stored as full (unsharded) host arrays, resharding is a
+device_put with the new mesh's NamedShardings — the sharding rules re-resolve
+against the new mesh sizes automatically (divisibility-aware), so e.g. an
+FSDP axis that shrank from 16 to 8 hosts still lays out correctly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.params import ShardingRules, is_def, shardings
+
+
+def reshard_state(state, target_shardings):
+    """Place a host-side pytree onto devices with new shardings."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, target_shardings
+    )
+
+
+def shrink_mesh_shape(shape: Tuple[int, ...], axes: Tuple[str, ...], axis: str, by: int):
+    """Shrink one mesh axis (e.g. lose a data-parallel slice)."""
+    out = []
+    for a, s in zip(axes, shape):
+        if a == axis:
+            assert s % by == 0 and s // by >= 1, (a, s, by)
+            out.append(s // by)
+        else:
+            out.append(s)
+    return tuple(out)
+
+
+def validate_global_batch(global_batch: int, mesh, data_axes=("pod", "data")) -> int:
+    """Per-replica batch after an elastic change; raises if indivisible."""
+    n = 1
+    for a in data_axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    assert global_batch % n == 0, (
+        f"global batch {global_batch} not divisible by data parallelism {n}"
+    )
+    return global_batch // n

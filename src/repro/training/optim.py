@@ -1,0 +1,166 @@
+"""From-scratch optimizers + schedules (no optax in this environment).
+
+Functional API mirroring optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``. All states are pytrees -> shardable/checkpointable.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = object
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# -- schedules -------------------------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(
+    peak_lr: float, total_steps: int, warmup_steps: int = 0, final_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+# -- gradient transforms -----------------------------------------------------------
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda x: x * scale, tree)
+
+
+# -- Adam / AdamW --------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: Optional[float] = None,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    """Adam(W). ``weight_decay`` > 0 gives decoupled AdamW decay."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=moment_dtype)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        if max_grad_norm is not None:
+            grads = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m2 / b1t
+            vhat = v2 / b2t
+            delta = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay > 0.0 and p is not None:
+                delta = delta - lr_t * weight_decay * p.astype(jnp.float32)
+            return delta, m2.astype(moment_dtype), v2.astype(moment_dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params) if params is not None else [None] * len(flat_g)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return deltas, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    weight_decay: float = 0.01,
+    **kw,
+) -> Optimizer:
+    return adam(lr=lr, weight_decay=weight_decay, **kw)
+
+
+# -- SGD (used by tests & the monitoring baseline) --------------------------------------
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(g, m):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return -lr_t * m2, m2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        out = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        mom = treedef.unflatten([o[1] for o in out])
+        return deltas, SGDState(step=step, momentum=mom)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host CPU device; the dry-run (and only the dry-run)
+# forces 512 host devices in its own subprocess.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

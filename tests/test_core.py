@@ -1,0 +1,176 @@
+"""COSTREAM core tests: featurization, joint graph, GNN, losses, metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CostModelConfig,
+    GNNConfig,
+    JointGraph,
+    MAX_HW,
+    MAX_OPS,
+    accuracy,
+    apply_gnn,
+    batch_graphs,
+    bce_loss,
+    build_graph,
+    drop_hardware,
+    ensemble_loss,
+    forward_ensemble,
+    init_cost_model,
+    init_gnn,
+    msle_loss,
+    predict,
+    qerror,
+    qerror_summary,
+)
+from repro.core.graph import SLOT_RANGES
+from repro.dsps import WorkloadGenerator
+
+GEN = WorkloadGenerator(seed=5)
+
+
+def _graph(seed=0):
+    gen = WorkloadGenerator(seed=seed)
+    q = gen.query(name="g")
+    c = gen.cluster()
+    p = gen.placement(q, c)
+    return build_graph(q, c, p), (q, c, p)
+
+
+def test_graph_slot_layout():
+    g, (q, c, p) = _graph(1)
+    # every active node sits inside its type's slot range
+    for t, start, stop in SLOT_RANGES:
+        seg = g.op_type[start:stop]
+        assert (seg == t).all()
+    assert g.op_mask.sum() == q.n_ops()
+    assert g.hw_mask.sum() == c.n_nodes()
+    # placement rows sum to 1 for active ops
+    assert np.allclose(g.a_place.sum(axis=1) * g.op_mask, g.op_mask)
+    # data-flow edge count preserved
+    assert g.a_flow.sum() == len(q.edges)
+
+
+def test_features_finite():
+    g, _ = _graph(2)
+    assert np.isfinite(g.op_x).all()
+    assert np.isfinite(g.hw_x).all()
+
+
+def test_gnn_padding_invariance():
+    """Adding padded host slots must not change the prediction."""
+    g, _ = _graph(3)
+    cfg = GNNConfig(hidden=16)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    out1 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g), cfg)
+    # zero out a padded host's features with garbage behind the mask
+    g2 = g._replace(hw_x=g.hw_x + (1 - g.hw_mask[:, None]) * 999.0)
+    out2 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g2), cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-4)
+
+
+def test_gnn_host_permutation_invariance():
+    """Hosts are a set: permuting host slots permutes nothing observable."""
+    g, _ = _graph(4)
+    cfg = GNNConfig(hidden=16)
+    params = init_gnn(jax.random.PRNGKey(1), cfg)
+    perm = np.random.default_rng(0).permutation(MAX_HW)
+    g2 = g._replace(
+        hw_x=g.hw_x[perm], hw_mask=g.hw_mask[perm], a_place=g.a_place[:, perm]
+    )
+    out1 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g), cfg)
+    out2 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g2), cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-4)
+
+
+def test_gnn_placement_sensitivity():
+    """Moving an operator to a different host must change the prediction."""
+    g, (q, c, p) = _graph(5)
+    if c.n_nodes() < 2:
+        pytest.skip("needs 2 hosts")
+    cfg = GNNConfig(hidden=16)
+    params = init_gnn(jax.random.PRNGKey(2), cfg)
+    out1 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g), cfg)
+    a2 = g.a_place.copy()
+    row = int(np.argmax(g.op_mask))  # first active op
+    new = np.zeros_like(a2[row])
+    new[(np.argmax(a2[row]) + 1) % c.n_nodes()] = 1.0
+    a2[row] = new
+    g2 = g._replace(a_place=a2)
+    out2 = apply_gnn(params, jax.tree_util.tree_map(jnp.asarray, g2), cfg)
+    assert not np.allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_drop_hardware_removes_info():
+    g, _ = _graph(6)
+    g2 = drop_hardware(g)
+    assert g2.hw_mask.sum() == 0
+    assert g2.a_place.sum() == 0
+
+
+def test_losses():
+    y = jnp.asarray([1.0, 10.0, 100.0])
+    raw_perfect = jnp.log1p(y)
+    assert float(msle_loss(raw_perfect, y)) < 1e-10
+    assert float(msle_loss(raw_perfect + 1.0, y)) > 0.5
+    logits = jnp.asarray([10.0, -10.0])
+    labels = jnp.asarray([1.0, 0.0])
+    assert float(bce_loss(logits, labels)) < 1e-3
+
+
+def test_ensemble_members_differ():
+    g, _ = _graph(7)
+    gb = batch_graphs([g])
+    gb = jax.tree_util.tree_map(jnp.asarray, gb)
+    cfg = CostModelConfig(metric="latency_p", n_ensemble=3, gnn=GNNConfig(hidden=16))
+    params = init_cost_model(jax.random.PRNGKey(3), cfg)
+    raw = np.asarray(forward_ensemble(params, gb, cfg))
+    assert raw.shape == (3, 1)
+    assert len(set(np.round(raw[:, 0], 6))) > 1  # different seeds -> different preds
+
+
+def test_classification_majority_vote():
+    g, _ = _graph(8)
+    gb = jax.tree_util.tree_map(jnp.asarray, batch_graphs([g, g, g]))
+    cfg = CostModelConfig(metric="success", n_ensemble=3, gnn=GNNConfig(hidden=16))
+    params = init_cost_model(jax.random.PRNGKey(4), cfg)
+    out = predict(params, gb, cfg)
+    assert set(np.unique(out)).issubset({0, 1})
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.floats(1e-3, 1e6, allow_nan=False),
+    st.floats(1e-3, 1e6, allow_nan=False),
+)
+def test_qerror_properties(c, chat):
+    q = qerror(np.asarray([c]), np.asarray([chat]))[0]
+    assert q >= 1.0 - 1e-12
+    # symmetry
+    q2 = qerror(np.asarray([chat]), np.asarray([c]))[0]
+    assert abs(q - q2) < 1e-9 * max(q, q2)
+
+
+def test_qerror_perfect():
+    s = qerror_summary(np.asarray([3.0, 5.0]), np.asarray([3.0, 5.0]))
+    assert abs(s["q50"] - 1.0) < 1e-9
+
+
+def test_accuracy():
+    assert accuracy([1, 0, 1, 1], [1, 0, 0, 1]) == 0.75
+
+
+def test_training_reduces_loss():
+    """Three epochs on a tiny corpus must reduce training loss."""
+    from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
+
+    traces = WorkloadGenerator(seed=11).corpus(200)
+    ds = dataset_from_traces(traces, "latency_p")
+    tr, va, te = split_dataset(ds)
+    cfg = CostModelConfig(metric="latency_p", n_ensemble=2, gnn=GNNConfig(hidden=16))
+    res = train_cost_model(tr, va, cfg, TrainConfig(epochs=3, batch_size=64, verbose=False))
+    assert res.history[-1]["train_loss"] < res.history[0]["train_loss"]

@@ -1,0 +1,172 @@
+"""Distribution substrate: attention oracle equivalence, DP compression step,
+pipeline parallelism, small-mesh dry-run (subprocess), fault harness."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.blocks import _attend_blocked, _attend_naive
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def test_blocked_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, Sq, Sk, H, KV, D = 2, 64, 2048, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KV, D))
+    v = jax.random.normal(ks[2], (B, Sk, KV, D))
+    kw = dict(
+        q_pos=jnp.arange(Sk - Sq, Sk),
+        k_pos=jnp.arange(Sk),
+        causal=True,
+        window=300,
+        cap=30.0,
+        k_len=None,
+    )
+    a = _attend_naive(q, k, v, **kw)
+    b = _attend_blocked(q, k, v, block=256, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_dp_train_step_single_device_mesh():
+    """shard_map DP step with int8 compression on a 1-device mesh."""
+    from repro.distributed import make_dp_train_step
+    from repro.training import optim
+
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    opt = optim.adam(lr=0.1)
+    params = {"w": jnp.ones((4, 1))}
+    state = {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    w_true = jnp.asarray([[1.0], [-2.0], [0.5], [3.0]])
+    batch = {"x": x, "y": x @ w_true}
+
+    step = make_dp_train_step(loss_fn, opt, mesh, compression="int8")
+    losses = []
+    for i in range(60):
+        state, m = step(state, batch, jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.1
+
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_4_devices():
+    out = _run_subprocess(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import pipeline_forward
+        mesh = jax.make_mesh((4,), ("pipe",))
+        W = jnp.stack([jnp.eye(8) * (i + 1) for i in range(4)])  # 4 stage mats
+        def stage(w, x):
+            return x @ w
+        piped = pipeline_forward(stage, mesh)
+        xs = jnp.asarray(np.random.default_rng(0).normal(size=(6, 2, 8)), jnp.float32)
+        out = piped(W, xs)
+        expect = xs
+        for i in range(4):
+            expect = expect @ (jnp.eye(8) * (i + 1))
+        assert np.allclose(out, expect, atol=1e-4), (out[0,0,:3], expect[0,0,:3])
+        print("PIPELINE-OK")
+        """
+    )
+    assert "PIPELINE-OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    """Lower + compile two reduced cells on an 8-device host mesh; roofline
+    terms must be positive and the collective parser must find ops."""
+    out = _run_subprocess(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import repro.launch.mesh as M
+        M.make_production_mesh = lambda *, multi_pod=False: jax.make_mesh(
+            (2, 2, 2) if multi_pod else (4, 2),
+            ("pod", "data", "model") if multi_pod else ("data", "model"))
+        import repro.configs.base as CB
+        CB.SHAPES = (CB.ShapeSpec("train_4k", 128, 8, "train"),
+                     CB.ShapeSpec("decode_32k", 256, 8, "decode"))
+        import repro.launch.dryrun as D
+        from repro.configs import get_config, reduced
+        _orig = get_config
+        D.get_config = lambda a: reduced(_orig(a))
+        import json
+        for arch in ["internlm2-1.8b", "gemma2-2b"]:
+            for mp in [False, True]:
+                cell = D.run_cell(arch, "train_4k", mp, save=False, verbose=False)
+                assert cell["status"] == "ok", cell.get("error")
+                r = cell["roofline"]
+                assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+                assert r["collectives"]["count"] > 0
+        cell = D.run_cell("internlm2-1.8b", "decode_32k", False, save=False, verbose=False)
+        assert cell["status"] == "ok", cell.get("error")
+        print("DRYRUN-OK")
+        """
+    )
+    assert "DRYRUN-OK" in out
+
+
+def test_fault_harness_recovery(tmp_path):
+    from repro.launch.faults import ClusterMonitor, FaultPolicy, run_with_faults
+    from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    ckdir = str(tmp_path / "ck")
+    state = {"step": np.zeros(1)}
+
+    def save_fn(step):
+        save_checkpoint(ckdir, step, {"step": np.asarray([step], np.float64)})
+
+    def restore_fn():
+        s = latest_step(ckdir)
+        return int(s) if s is not None else None
+
+    def train_epoch(start, n_hosts):
+        assert n_hosts >= 1
+        return start + 10
+
+    monitor = ClusterMonitor(n_hosts=8, policy=FaultPolicy(heartbeat_timeout_s=5))
+    schedule = {20: ("fail", 3), 40: ("straggle", 5)}
+    final, events = run_with_faults(
+        train_epoch, save_fn, restore_fn, monitor, schedule, total_steps=100
+    )
+    assert final >= 100
+    assert len(events) >= 1  # at least the host failure triggered recovery
+    reasons = ";".join(e.reason for e in events)
+    assert "heartbeat-timeout" in reasons
+    assert monitor.n_alive() <= 7
+    # straggler demotion also fires
+    assert any("straggler" in r for r in reasons.split(";")) or monitor.n_alive() <= 6

@@ -1,0 +1,148 @@
+"""DSPS substrate tests: query IR, simulator physics, generator corpus."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dsps import (
+    Cluster,
+    GeneratorConfig,
+    HardwareNode,
+    Placement,
+    WorkloadGenerator,
+    hardware_bin,
+    simulate,
+)
+from repro.dsps.query import OpType
+from repro.dsps.simulator import SimulatorConfig, analyze_operators, _dtype_mix
+from repro.dsps.benchmarks import sample_benchmark_query
+
+GEN = WorkloadGenerator(seed=123)
+
+
+def test_query_structure():
+    q = GEN.query(kind="three_way", name="t3")
+    assert q.count(OpType.SOURCE) == 3
+    assert q.count(OpType.JOIN) == 2
+    assert len(q.sinks()) == 1
+    order = q.topological_order()
+    assert len(order) == q.n_ops()
+    # every edge goes forward in topological order
+    pos = {u: i for i, u in enumerate(order)}
+    assert all(pos[u] < pos[v] for u, v in q.edges)
+
+
+def test_widths_propagate():
+    q = GEN.query(kind="two_way")
+    for op in q.operators:
+        if op.op_type != OpType.SOURCE:
+            assert op.tuple_width_in > 0
+    j = [o for o in q.operators if o.op_type == OpType.JOIN][0]
+    parents = q.parents(j.op_id)
+    assert j.tuple_width_in == sum(q.op(p).tuple_width_out for p in parents)
+
+
+def test_simulator_deterministic():
+    q = GEN.query(kind="linear", name="det")
+    c = GEN.cluster(4)
+    p = GEN.placement(q, c)
+    a = simulate(q, c, p)
+    b = simulate(q, c, p)
+    assert a == b  # rng derived from (query, placement) hash
+
+
+def test_le_geq_lp():
+    for i in range(30):
+        t = GEN.trace(name=f"le{i}")
+        assert t.labels.latency_e >= t.labels.latency_p
+
+
+def test_failed_queries_have_zero_throughput():
+    for i in range(60):
+        t = GEN.trace(name=f"s{i}")
+        if t.labels.success == 0:
+            assert t.labels.throughput == 0.0
+
+
+def test_stronger_cpu_not_worse():
+    """More CPU on every host must not increase latency (noise disabled)."""
+    sim = SimulatorConfig(noise_sigma=0.0)
+    worse = 0
+    for i in range(20):
+        q = GEN.query(name=f"cpu{i}")
+        c = GEN.cluster(4)
+        p = GEN.placement(q, c)
+        weak = simulate(q, c, p, sim)
+        strong_nodes = [
+            HardwareNode(n.node_id, n.cpu * 4, n.ram_mb, n.bandwidth_mbps, n.latency_ms)
+            for n in c.nodes
+        ]
+        strong = simulate(q, Cluster(strong_nodes), p, sim)
+        if strong.latency_p > weak.latency_p * 1.001:
+            worse += 1
+    assert worse == 0
+
+
+def test_backpressure_under_overload():
+    """A tiny host fed a huge rate must backpressure."""
+    gen = WorkloadGenerator(
+        GeneratorConfig().with_hardware(cpu=(50,), event_rate_linear=(25600,)), seed=1
+    )
+    bp = 0
+    for i in range(20):
+        q = gen.query(kind="linear", name=f"bp{i}")
+        c = gen.cluster(3)
+        p = gen.placement(q, c)
+        labels = simulate(q, c, p)
+        bp += labels.backpressure == 0
+    assert bp > 10  # most runs are backpressured
+
+
+def test_corpus_mix():
+    gen = WorkloadGenerator(seed=7)
+    kinds = {"linear": 0, "two_way": 0, "three_way": 0}
+    for i in range(300):
+        q = gen.query(name=f"m{i}")
+        joins = q.count(OpType.JOIN)
+        kinds[["linear", "two_way", "three_way"][joins]] += 1
+    # paper SVI: ~35/34/31
+    assert 0.2 < kinds["linear"] / 300 < 0.5
+    assert 0.2 < kinds["two_way"] / 300 < 0.5
+    assert 0.15 < kinds["three_way"] / 300 < 0.45
+
+
+def test_hardware_bins_ordered():
+    lo = HardwareNode(0, 50, 1000, 25, 160)
+    hi = HardwareNode(1, 800, 32000, 10000, 1)
+    assert hardware_bin(lo) == 0
+    assert hardware_bin(hi) == 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_selectivities_bounded(seed):
+    gen = WorkloadGenerator(seed=seed)
+    q = gen.query(name="h")
+    for op in q.operators:
+        assert 0.0 <= op.selectivity <= 1.0
+        if op.window is not None:
+            assert op.window.size > 0
+
+
+def test_benchmark_queries_simulate():
+    rng = np.random.default_rng(3)
+    for name in ("advertisement", "spike_detection", "smart_grid_global", "smart_grid_local"):
+        q = sample_benchmark_query(name, rng)
+        c = GEN.cluster(5)
+        p = GEN.placement(q, c)
+        labels = simulate(q, c, p)
+        assert labels.latency_p > 0
+
+
+def test_operator_rates_conserve():
+    q = GEN.query(kind="linear", name="rates")
+    rt = analyze_operators(q, _dtype_mix(q))
+    for op in q.operators:
+        if op.op_type == OpType.FILTER:
+            parent = q.parents(op.op_id)[0]
+            assert rt[op.op_id].rate_out <= rt[parent].rate_out + 1e-9

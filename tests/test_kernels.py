@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + grads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nn
+from repro.core.graph import SLOT_RANGES
+from repro.kernels.banked_mlp.ops import banked_mlp_slotted
+from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
+from repro.kernels.mp_update.ops import mp_update
+from repro.kernels.mp_update.ref import mp_update_ref
+from repro.kernels.rglru.ops import linear_scan
+from repro.kernels.rglru.ref import linear_scan_ref
+
+
+@pytest.mark.parametrize("B", [1, 2, 8])
+@pytest.mark.parametrize("F,H", [(39, 32), (64, 64), (128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_banked_mlp_sweep(B, F, H, dtype):
+    key = jax.random.PRNGKey(B * 1000 + F)
+    p = nn.init_mlp_bank(key, 5, [F, H, H])
+    if dtype == jnp.bfloat16:
+        p = nn.cast_floats(p, dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 12, F), dtype)
+    out_k = banked_mlp_slotted(p, x, SLOT_RANGES)
+    out_r = banked_mlp_slotted_ref(p, x, SLOT_RANGES)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_banked_mlp_grads_match():
+    p = nn.init_mlp_bank(jax.random.PRNGKey(0), 5, [39, 32, 32])
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 12, 39))
+    gk = jax.grad(lambda p, x: jnp.sum(banked_mlp_slotted(p, x, SLOT_RANGES) ** 2), argnums=(0, 1))(p, x)
+    gr = jax.grad(lambda p, x: jnp.sum(banked_mlp_slotted_ref(p, x, SLOT_RANGES) ** 2), argnums=(0, 1))(p, x)
+    for a, b in zip(jax.tree_util.tree_leaves(gk), jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("B", [1, 4])
+@pytest.mark.parametrize("H", [32, 64])
+def test_mp_update_sweep(B, H):
+    key = jax.random.PRNGKey(H + B)
+    p = nn.init_mlp_bank(key, 5, [2 * H, H, H])
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, 12, H))
+    a = (jax.random.uniform(jax.random.PRNGKey(2), (B, 12, 12)) > 0.75).astype(jnp.float32)
+    depth = jax.random.randint(jax.random.PRNGKey(3), (B, 12), 0, 6)
+    mask = (jax.random.uniform(jax.random.PRNGKey(4), (B, 12)) > 0.2).astype(jnp.float32)
+    for d in [0, 2, 5]:
+        dd = jnp.asarray(d, jnp.int32)
+        out_k = mp_update(p, h, a, depth, mask, dd, SLOT_RANGES)
+        out_r = mp_update_ref(p, h, a, depth, mask, dd, SLOT_RANGES)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+
+def test_mp_update_only_touches_selected_depth():
+    H = 16
+    p = nn.init_mlp_bank(jax.random.PRNGKey(0), 5, [2 * H, H, H])
+    h = jax.random.normal(jax.random.PRNGKey(1), (1, 12, H))
+    a = jnp.zeros((1, 12, 12))
+    depth = jnp.zeros((1, 12), jnp.int32).at[0, 3].set(2)
+    mask = jnp.ones((1, 12))
+    out = mp_update(p, h, a, depth, mask, jnp.asarray(2, jnp.int32), SLOT_RANGES)
+    # all rows except depth==2 rows must be unchanged
+    unchanged = np.ones(12, bool)
+    unchanged[3] = False
+    np.testing.assert_allclose(np.asarray(out[0, unchanged]), np.asarray(h[0, unchanged]))
+    assert not np.allclose(np.asarray(out[0, 3]), np.asarray(h[0, 3]))
+
+
+@pytest.mark.parametrize("B,T,D", [(1, 16, 8), (2, 128, 32), (4, 256, 16)])
+def test_rglru_scan_sweep(B, T, D):
+    ks = jax.random.split(jax.random.PRNGKey(T), 3)
+    a = jax.random.uniform(ks[0], (B, T, D), minval=0.5, maxval=0.999)
+    b = jax.random.normal(ks[1], (B, T, D)) * 0.1
+    h0 = jax.random.normal(ks[2], (B, D))
+    np.testing.assert_allclose(
+        np.asarray(linear_scan(a, b, h0)),
+        np.asarray(linear_scan_ref(a, b, h0)),
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(1, 16))
+def test_rglru_hypothesis_shapes(B, T, D):
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + T * 10 + D), 3)
+    a = jax.random.uniform(ks[0], (B, T, D), minval=0.0, maxval=1.0)
+    b = jax.random.normal(ks[1], (B, T, D))
+    h0 = jax.random.normal(ks[2], (B, D))
+    out = linear_scan(a, b, h0)
+    ref = linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_rglru_matches_sequential():
+    """Oracle itself vs an explicit python loop."""
+    B, T, D = 2, 7, 3
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0.5, 1.0, (B, T, D)).astype(np.float32)
+    b = rng.normal(size=(B, T, D)).astype(np.float32)
+    h0 = rng.normal(size=(B, D)).astype(np.float32)
+    h = h0.copy()
+    expect = np.zeros_like(a)
+    for t in range(T):
+        h = a[:, t] * h + b[:, t]
+        expect[:, t] = h
+    np.testing.assert_allclose(np.asarray(linear_scan_ref(jnp.asarray(a), jnp.asarray(b), jnp.asarray(h0))), expect, atol=1e-5)
+
+
+def test_pallas_gnn_path_matches_jnp():
+    import repro.core as core
+    from repro.dsps import WorkloadGenerator
+    from repro.training import dataset_from_traces
+
+    traces = WorkloadGenerator(seed=3).corpus(8)
+    ds = dataset_from_traces(traces, "latency_p")
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graphs)
+    cfg_ref = core.CostModelConfig(metric="latency_p", n_ensemble=2, gnn=core.GNNConfig(hidden=16))
+    cfg_pal = core.CostModelConfig(
+        metric="latency_p", n_ensemble=2, gnn=core.GNNConfig(hidden=16, use_pallas=True)
+    )
+    params = core.init_cost_model(jax.random.PRNGKey(0), cfg_ref)
+    r1 = core.forward_ensemble(params, g, cfg_ref)
+    r2 = core.forward_ensemble(params, g, cfg_pal)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-4)

@@ -1,0 +1,79 @@
+"""Placement enumeration rules (Fig. 5), optimizer (Fig. 4), baselines."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CostModelConfig, GNNConfig, init_cost_model
+from repro.dsps import WorkloadGenerator, simulate
+from repro.dsps.placement import is_acyclic_placement, respects_increasing_capability
+from repro.placement import (
+    PlacementOptimizer,
+    enumerate_candidates,
+    heuristic_placement,
+    online_monitoring_run,
+    valid_candidate,
+)
+
+GEN = WorkloadGenerator(seed=21)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 5000))
+def test_enumeration_respects_rules(seed):
+    gen = WorkloadGenerator(seed=seed)
+    q = gen.query(name="e")
+    c = gen.cluster(6)
+    rng = np.random.default_rng(seed)
+    for p in enumerate_candidates(q, c, 8, rng):
+        assert respects_increasing_capability(q, c, p)
+        assert is_acyclic_placement(q, p)
+        p.validate(q, c)
+
+
+def test_heuristic_placement_valid():
+    for i in range(10):
+        q = GEN.query(name=f"h{i}")
+        c = GEN.cluster(6)
+        p = heuristic_placement(q, c)
+        p.validate(q, c)
+        assert valid_candidate(q, c, p)
+
+
+def _tiny_models():
+    models = {}
+    for m in ("latency_p", "success", "backpressure"):
+        cfg = CostModelConfig(metric=m, n_ensemble=2, gnn=GNNConfig(hidden=16))
+        models[m] = (init_cost_model(jax.random.PRNGKey(0), cfg), cfg)
+    return models
+
+
+def test_optimizer_returns_valid_candidate():
+    opt = PlacementOptimizer(_tiny_models())
+    q = GEN.query(kind="two_way", name="opt")
+    c = GEN.cluster(6)
+    res = opt.optimize(q, c, "latency_p", k=12, rng=np.random.default_rng(1))
+    res.placement.validate(q, c)
+    assert valid_candidate(q, c, res.placement)
+    assert res.n_candidates > 0
+    assert len(res.scores) == res.n_candidates
+
+
+def test_optimizer_feasibility_filter():
+    opt = PlacementOptimizer(_tiny_models())
+    q = GEN.query(name="feas")
+    c = GEN.cluster(5)
+    res = opt.optimize(q, c, "latency_p", k=8, rng=np.random.default_rng(2))
+    assert 0 < res.n_feasible <= res.n_candidates
+
+
+def test_monitoring_baseline_improves_or_stops():
+    q = GEN.query(kind="linear", name="mon")
+    c = GEN.cluster(6)
+    init = heuristic_placement(q, c)
+    target = simulate(q, c, init).latency_p * 0.5  # ambitious target
+    res = online_monitoring_run(q, c, init, target_latency=target, max_rounds=6)
+    assert res.final_latency <= res.initial_latency * 1.5
+    assert len(res.steps) >= 1
+    assert res.migrations >= 0

@@ -1,0 +1,67 @@
+"""End-to-end behaviour: train COSTREAM on a small corpus, verify the learned
+model (a) predicts better than untrained, (b) drives placement decisions that
+beat the heuristic baseline on simulator-measured latency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModelConfig,
+    GNNConfig,
+    init_cost_model,
+    predict,
+    qerror_summary,
+)
+from repro.dsps import WorkloadGenerator, simulate
+from repro.placement import PlacementOptimizer, heuristic_placement
+from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
+
+
+@pytest.fixture(scope="module")
+def trained():
+    gen = WorkloadGenerator(seed=77)
+    traces = gen.corpus(700)
+    models = {}
+    tests = {}
+    for metric in ("latency_p", "success", "backpressure"):
+        ds = dataset_from_traces(traces, metric)
+        tr, va, te = split_dataset(ds, seed=1)
+        cfg = CostModelConfig(metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=32))
+        res = train_cost_model(
+            tr, va, cfg, TrainConfig(epochs=10, batch_size=128, verbose=False)
+        )
+        models[metric] = (res.params, cfg)
+        tests[metric] = te
+    return models, tests
+
+
+def test_trained_beats_untrained(trained):
+    models, tests = trained
+    params, cfg = models["latency_p"]
+    te = tests["latency_p"]
+    g = jax.tree_util.tree_map(jnp.asarray, te.graphs)
+    trained_q = qerror_summary(te.labels, predict(params, g, cfg))["q50"]
+    untrained = init_cost_model(jax.random.PRNGKey(9), cfg)
+    untrained_q = qerror_summary(te.labels, predict(untrained, g, cfg))["q50"]
+    assert trained_q < untrained_q * 0.5, (trained_q, untrained_q)
+    assert trained_q < 5.0  # small corpus, loose bound
+
+
+def test_costream_placement_beats_heuristic(trained):
+    models, _ = trained
+    opt = PlacementOptimizer(models)
+    gen = WorkloadGenerator(seed=88)
+    rng = np.random.default_rng(0)
+    wins, total = 0, 0
+    for i in range(12):
+        q = gen.query(kind="linear", name=f"pl{i}")
+        c = gen.cluster(6)
+        base = heuristic_placement(q, c)
+        base_lat = simulate(q, c, base).latency_p
+        res = opt.optimize(q, c, "latency_p", k=24, rng=rng)
+        got_lat = simulate(q, c, res.placement).latency_p
+        wins += got_lat <= base_lat
+        total += 1
+    assert wins / total >= 0.6, f"won {wins}/{total}"
