@@ -1,0 +1,173 @@
+"""Placement-search microbenchmark: candidates scored per second.
+
+Compares the two scoring paths of ``PlacementOptimizer`` on the same
+candidate set and the same (untrained) per-metric ensembles:
+
+  seed path   ``score_candidates``  — per-candidate ``build_graph`` loop,
+              graph batch rebuilt + re-transferred once PER METRIC;
+  fast path   ``score_assignments`` — one ``build_graph_batch``
+              materialization shared by ALL metric ensembles.
+
+Also counts graph materializations per path (the fast path must build each
+candidate graph exactly once across all metrics).  Untrained ensembles are
+fine here: scoring throughput does not depend on the weights' values.
+
+    PYTHONPATH=src python benchmarks/placement_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+import repro.core.graph as graph_mod
+import repro.placement.optimizer as optimizer_mod
+from repro.core import CostModelConfig, GNNConfig, init_cost_model
+from repro.dsps import WorkloadGenerator
+from repro.dsps.placement import Placement
+from repro.placement import PlacementOptimizer, sample_assignment_matrix
+
+METRICS = ("latency_p", "success", "backpressure")
+
+
+class BuildCounter:
+    """Counts candidate-graph materializations in both build entry points."""
+
+    def __init__(self):
+        self.single = 0  # build_graph calls (one candidate each)
+        self.batch = 0  # candidates materialized via build_graph_batch
+
+    def install(self):
+        self._orig_single = graph_mod.build_graph
+        self._orig_batch = graph_mod.build_graph_batch
+        self._orig_place = graph_mod.build_a_place_batch
+
+        def counted_single(*a, **kw):
+            self.single += 1
+            return self._orig_single(*a, **kw)
+
+        def counted_batch(query, cluster, assignments, *a, **kw):
+            # no count here: build_graph_batch delegates to build_a_place_batch
+            # (patched below), which counts the candidates exactly once
+            return self._orig_batch(query, cluster, assignments, *a, **kw)
+
+        def counted_place(query, cluster, assignments, *a, **kw):
+            self.batch += len(np.asarray(assignments))
+            return self._orig_place(query, cluster, assignments, *a, **kw)
+
+        graph_mod.build_graph = counted_single
+        graph_mod.build_graph_batch = counted_batch
+        graph_mod.build_a_place_batch = counted_place
+        # the optimizer imported the names directly; patch its module globals too
+        optimizer_mod.build_graph = counted_single
+        optimizer_mod.build_graph_batch = counted_batch
+        optimizer_mod.build_a_place_batch = counted_place
+        return self
+
+    def uninstall(self):
+        graph_mod.build_graph = self._orig_single
+        graph_mod.build_graph_batch = self._orig_batch
+        graph_mod.build_a_place_batch = self._orig_place
+        optimizer_mod.build_graph = self._orig_single
+        optimizer_mod.build_graph_batch = self._orig_batch
+        optimizer_mod.build_a_place_batch = self._orig_place
+
+    @property
+    def total(self) -> int:
+        return self.single + self.batch
+
+
+def make_optimizer(hidden: int = 32, n_ensemble: int = 3) -> PlacementOptimizer:
+    models = {}
+    for i, metric in enumerate(METRICS):
+        cfg = CostModelConfig(metric=metric, n_ensemble=n_ensemble, gnn=GNNConfig(hidden=hidden))
+        models[metric] = (init_cost_model(jax.random.PRNGKey(i), cfg), cfg)
+    return PlacementOptimizer(models)
+
+
+def run(n_candidates: int, repeats: int, seed: int = 0) -> dict:
+    repeats = max(1, repeats)
+    gen = WorkloadGenerator(seed=seed)
+    q = gen.query(kind="two_way", name="bench")
+    c = gen.cluster(6)
+    rng = np.random.default_rng(seed)
+    a = sample_assignment_matrix(q, c, n_candidates, rng, max_tries_factor=200)
+    if len(a) != n_candidates:
+        raise SystemExit(f"only {len(a)}/{n_candidates} distinct candidates available")
+    candidates = [Placement.of(row) for row in a]
+    opt = make_optimizer()
+
+    def seed_path():
+        return {m: opt.score_candidates(q, c, candidates, m) for m in METRICS}
+
+    def fast_path():
+        return opt.score_assignments(q, c, a, METRICS)
+
+    # warm up the jit caches at the benchmark's bucket shape, then verify the
+    # two paths agree before trusting the timings
+    ref, got = seed_path(), fast_path()
+    for m in METRICS:
+        np.testing.assert_allclose(got[m], ref[m], rtol=1e-5, atol=1e-6, err_msg=m)
+
+    counter = BuildCounter().install()
+    try:
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            seed_path()
+        t_seed = (time.perf_counter() - t0) / repeats
+        seed_builds = counter.total / repeats
+
+        counter.single = counter.batch = 0
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fast_path()
+        t_fast = (time.perf_counter() - t0) / repeats
+        fast_builds = counter.total / repeats
+    finally:
+        counter.uninstall()
+
+    return {
+        "n_candidates": n_candidates,
+        "n_metrics": len(METRICS),
+        "repeats": repeats,
+        "seed_path_s": round(t_seed, 4),
+        "fast_path_s": round(t_fast, 4),
+        "seed_cands_per_s": round(n_candidates / t_seed, 1),
+        "fast_cands_per_s": round(n_candidates / t_fast, 1),
+        "speedup": round(t_seed / t_fast, 2),
+        "seed_builds_per_candidate": round(seed_builds / n_candidates, 2),
+        "fast_builds_per_candidate": round(fast_builds / n_candidates, 2),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--candidates", type=int, default=1024)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true", help="small run for per-PR CI")
+    ap.add_argument("--min-speedup", type=float, default=None, help="fail below this")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.candidates, args.repeats = 256, 1
+
+    res = run(args.candidates, args.repeats)
+    print(json.dumps(res, indent=2))
+    # not assert: this is the CI gate's invariant, it must survive python -O
+    if res["fast_builds_per_candidate"] != 1.0:
+        raise SystemExit(
+            "fast path must build each candidate graph exactly once, got "
+            f"{res['fast_builds_per_candidate']}"
+        )
+    if args.min_speedup is not None and res["speedup"] < args.min_speedup:
+        raise SystemExit(
+            f"scoring speedup {res['speedup']}x below required {args.min_speedup}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

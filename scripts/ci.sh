@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Per-PR gate: tier-1 test suite + a quick placement-scoring perf check so
+# regressions in the batched scoring path show up in CI, not in Exp-2 runs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== placement scoring perf (quick) =="
+# the fast path must build each candidate graph exactly once (asserted inside)
+# and stay well ahead of the seed per-metric-rebuild path
+python benchmarks/placement_bench.py --quick --min-speedup 3

@@ -16,12 +16,26 @@ from repro.core.graph import (
     MAX_OPS,
     MAX_HW,
     JointGraph,
+    QueryStatic,
+    bucket_size,
+    build_a_place_batch,
     build_graph,
+    build_graph_batch,
+    build_graph_skeleton,
     batch_graphs,
     drop_hardware,
     drop_hw_features,
+    pad_batch,
+    query_static,
 )
-from repro.core.gnn import GNNConfig, init_gnn, apply_gnn, apply_gnn_batch, apply_gnn_traditional
+from repro.core.gnn import (
+    GNNConfig,
+    init_gnn,
+    apply_gnn,
+    apply_gnn_batch,
+    apply_gnn_placed,
+    apply_gnn_traditional,
+)
 from repro.core.model import (
     ALL_METRICS,
     REGRESSION_METRICS,
@@ -34,6 +48,8 @@ from repro.core.model import (
     msle_loss,
     bce_loss,
     predict,
+    predict_metrics,
+    predict_placements,
     predict_proba,
     label_array,
 )

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from repro import nn
 from repro.core.features import HW_FEATURE_DIM, N_OP_TYPES, OP_FEATURE_DIM
-from repro.core.graph import MAX_DEPTH, SLOT_RANGES, JointGraph
+from repro.core.graph import MAX_DEPTH, SLOT_RANGES, JointGraph, QueryStatic
 
 
 @dataclass(frozen=True)
@@ -119,6 +119,77 @@ def apply_gnn(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
 def apply_gnn_batch(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
     """(B, ...) graphs -> (B, n_outputs)."""
     return jax.vmap(lambda gg: apply_gnn(params, gg, cfg))(g)
+
+
+def _bank_member(p: nn.Params, t: int) -> nn.Params:
+    """Extract one type's MLP from a stacked bank (leading type axis)."""
+    return {"layers": [{"w": l["w"][t], "b": l["b"][t]} for l in p["layers"]]}
+
+
+def apply_gnn_placed(
+    params: nn.Params,
+    skel: JointGraph,
+    a_place: jax.Array,
+    static: QueryStatic,
+    cfg: GNNConfig,
+) -> jax.Array:
+    """Placement-batch forward: one query, ``(B, O, W)`` candidate placements.
+
+    Numerically identical to ``apply_gnn_batch`` on the broadcast batch (the
+    parity tests in tests/test_placement.py pin this), but exploits that every
+    candidate shares the skeleton:
+
+      * stage 0 encoders run ONCE on the unbatched skeleton (placement-
+        invariant) and are broadcast, not recomputed per candidate;
+      * the stage-3 data-flow sweep is unrolled over ``static.updates``,
+        touching only the slots that hold an operator at each depth level —
+        O(n_ops) narrow matmuls instead of O(MAX_DEPTH * MAX_OPS) masked ones,
+        and depth levels past the query's true depth (provable no-ops) vanish.
+
+    Always uses the jnp banked MLPs; ``cfg.use_pallas`` only routes the
+    generic per-graph path through the kernels.
+    """
+    op_mask = skel.op_mask[:, None]  # (O,1)
+    hw_mask = skel.hw_mask[:, None]  # (W,1)
+    b = a_place.shape[0]
+
+    # stage 0: shared across candidates
+    h_ops0 = nn.apply_mlp_bank_slotted(params["op_enc"], skel.op_x, SLOT_RANGES) * op_mask
+    h_hw0 = nn.apply_mlp(params["hw_enc"], skel.hw_x) * hw_mask
+
+    # stage 1: OPS -> HW per candidate
+    msg_hw = jnp.einsum("bow,oh->bwh", a_place, h_ops0)
+    h_hw = (
+        nn.apply_mlp(
+            params["hw_upd"],
+            jnp.concatenate([jnp.broadcast_to(h_hw0, (b,) + h_hw0.shape), msg_hw], axis=-1),
+        )
+        * hw_mask
+    )
+
+    # stage 2: HW -> OPS per candidate
+    msg_ops = jnp.einsum("bow,bwh->boh", a_place, h_hw)
+    h = (
+        nn.apply_mlp_bank_slotted(
+            params["op_upd"],
+            jnp.concatenate([jnp.broadcast_to(h_ops0, (b,) + h_ops0.shape), msg_ops], axis=-1),
+            SLOT_RANGES,
+        )
+        * op_mask
+    )
+
+    # stage 3: data-flow sweep, unrolled over the static structure
+    for level in static.updates:
+        cols = [s for s, _, _ in level]
+        news = []
+        for s, t, parents in level:
+            msg = sum(h[:, p] for p in parents[1:]) + h[:, parents[0]]
+            x = jnp.concatenate([h[:, s], msg], axis=-1)  # (B, 2H)
+            news.append(nn.apply_mlp(_bank_member(params["op_upd"], t), x))
+        h = h.at[:, jnp.asarray(cols)].set(jnp.stack(news, axis=1))
+
+    pooled = jnp.sum(h, axis=1) + jnp.sum(h_hw, axis=1)  # rows are pre-masked
+    return nn.apply_mlp(params["out"], pooled)
 
 
 # ---------------------------------------------------------------------------

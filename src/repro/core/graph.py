@@ -74,13 +74,19 @@ def _slot_assignment(query: Query) -> dict:
     return slots
 
 
-def build_graph(
+def build_graph_skeleton(
     query: Query,
     cluster: Cluster,
-    placement: Placement,
     max_ops: int = MAX_OPS,
     max_hw: int = MAX_HW,
 ) -> JointGraph:
+    """The placement-invariant part of a joint graph (``a_place`` all zero).
+
+    Query and cluster features do not depend on where operators run, so a
+    skeleton can be materialized once and shared across every candidate
+    placement of the same (query, cluster) pair — the single-materialization
+    contract ``build_graph_batch`` relies on.
+    """
     n_ops, n_hw = query.n_ops(), cluster.n_nodes()
     assert n_ops <= max_ops, f"query has {n_ops} ops > pad {max_ops}"
     assert n_hw <= max_hw, f"cluster has {n_hw} hosts > pad {max_hw}"
@@ -111,8 +117,6 @@ def build_graph(
         hw_mask[node.node_id] = 1.0
     for u, v in query.edges:
         a_flow[slot[u], slot[v]] = 1.0
-    for i in range(n_ops):
-        a_place[slot[i], placement.node_of(i)] = 1.0
 
     return JointGraph(
         op_x=op_x,
@@ -126,8 +130,133 @@ def build_graph(
     )
 
 
+def slot_index(query: Query) -> np.ndarray:
+    """``slot_index(q)[op_id]`` = the canonical padded row of that operator."""
+    slot = _slot_assignment(query)
+    return np.asarray([slot[i] for i in range(query.n_ops())], dtype=np.int64)
+
+
+class QueryStatic(NamedTuple):
+    """Hashable trace-time summary of one query's structure in slot space.
+
+    Drives the placement-specialized GNN forward (``gnn.apply_gnn_placed``):
+    the stage-3 data-flow sweep is unrolled over ``updates`` — per depth level
+    ``d >= 1``, the tuple of ``(slot, type_id, parent_slots)`` to update — so
+    only the handful of slots that actually carry an operator at each depth
+    are recomputed, instead of all ``MAX_OPS`` slots for all ``MAX_DEPTH``
+    levels.  Being a tuple-of-ints NamedTuple it is hashable and serves as a
+    jit-cache key alongside the model config.
+    """
+
+    active: Tuple[int, ...]  # slots holding a real operator, ascending
+    updates: Tuple[Tuple[Tuple[int, int, Tuple[int, ...]], ...], ...]
+
+
+def query_static(query: Query) -> QueryStatic:
+    slot = _slot_assignment(query)
+    depths = query.depths()
+    levels = []
+    for d in range(1, query.max_depth() + 1):
+        level = []
+        for op in query.operators:
+            if depths[op.op_id] != d:
+                continue
+            parents = tuple(sorted(slot[p] for p in query.parents(op.op_id)))
+            level.append((slot[op.op_id], F.op_type_id(op), parents))
+        levels.append(tuple(sorted(level)))
+    return QueryStatic(
+        active=tuple(sorted(slot[i] for i in range(query.n_ops()))),
+        updates=tuple(levels),
+    )
+
+
+def build_a_place_batch(
+    query: Query,
+    cluster: Cluster,
+    assignments: np.ndarray,
+    max_ops: int = MAX_OPS,
+    max_hw: int = MAX_HW,
+) -> np.ndarray:
+    """Just the ``(N, max_ops, max_hw)`` placement adjacency of a batch."""
+    assignments = np.asarray(assignments, dtype=np.int64)
+    assert assignments.ndim == 2 and assignments.shape[1] == query.n_ops(), assignments.shape
+    assert cluster.n_nodes() <= max_hw, f"cluster has {cluster.n_nodes()} hosts > pad {max_hw}"
+    n = assignments.shape[0]
+    a_place = np.zeros((n, max_ops, max_hw), dtype=np.float32)
+    rows = slot_index(query)
+    a_place[np.arange(n)[:, None], rows[None, :], assignments] = 1.0
+    return a_place
+
+
+def build_graph(
+    query: Query,
+    cluster: Cluster,
+    placement: Placement,
+    max_ops: int = MAX_OPS,
+    max_hw: int = MAX_HW,
+) -> JointGraph:
+    g = build_graph_skeleton(query, cluster, max_ops, max_hw)
+    a_place = np.zeros((max_ops, max_hw), dtype=np.float32)
+    slot = _slot_assignment(query)
+    for i in range(query.n_ops()):
+        a_place[slot[i], placement.node_of(i)] = 1.0
+    return g._replace(a_place=a_place)
+
+
+def build_graph_batch(
+    query: Query,
+    cluster: Cluster,
+    assignments: np.ndarray,
+    max_ops: int = MAX_OPS,
+    max_hw: int = MAX_HW,
+) -> JointGraph:
+    """Batch of ``N`` candidate placements of one query, built in one pass.
+
+    ``assignments`` is an ``(N, n_ops)`` int matrix (``assignments[c, op_id]``
+    = host of ``op_id`` in candidate ``c``).  The skeleton is materialized
+    once; every placement-invariant field is a zero-copy broadcast view along
+    the new batch axis (read-only — copy before mutating), and only
+    ``a_place`` is written per candidate.  Equivalent to
+    ``batch_graphs([build_graph(q, c, Placement.of(row)) for row in a])`` but
+    O(1) featurization passes instead of O(N).
+    """
+    assignments = np.asarray(assignments, dtype=np.int64)
+    assert assignments.ndim == 2 and assignments.shape[1] == query.n_ops(), assignments.shape
+    n = assignments.shape[0]
+    g = build_graph_skeleton(query, cluster, max_ops, max_hw)
+    a_place = build_a_place_batch(query, cluster, assignments, max_ops, max_hw)
+    return JointGraph(
+        *[np.broadcast_to(x, (n,) + x.shape) for x in g[:-1]],
+        a_place=a_place,
+    )
+
+
 def batch_graphs(graphs: List[JointGraph]) -> JointGraph:
     return JointGraph(*[np.stack([getattr(g, f) for g in graphs]) for f in JointGraph._fields])
+
+
+def bucket_size(n: int) -> int:
+    """Smallest power of two >= n: the jit shape buckets the scorer pads to."""
+    assert n > 0, n
+    return 1 << (n - 1).bit_length()
+
+
+def pad_batch(g: JointGraph, target: int) -> JointGraph:
+    """Pad a batched graph along axis 0 to ``target`` rows.
+
+    Padding repeats the last graph, so every row stays a well-formed graph
+    (masks and slot types intact) and bucketed jit shapes never see garbage;
+    callers slice predictions back to the true count.
+    """
+    assert g.batched, "pad_batch needs a batched graph"
+    n = g.op_x.shape[0]
+    assert n <= target, (n, target)
+    if n == target:
+        return g
+    reps = [(0, target - n)] + [(0, 0)] * (g.op_x.ndim - 1)
+    return JointGraph(
+        *[np.pad(np.asarray(x), reps[: x.ndim], mode="edge") for x in g]
+    )
 
 
 # -- ablation transforms (Exp 7a) ----------------------------------------------

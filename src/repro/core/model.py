@@ -18,8 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import nn
-from repro.core.gnn import GNNConfig, apply_gnn_batch, apply_gnn_traditional, init_gnn
-from repro.core.graph import JointGraph
+from repro.core.gnn import (
+    GNNConfig,
+    apply_gnn_batch,
+    apply_gnn_placed,
+    apply_gnn_traditional,
+    init_gnn,
+)
+from repro.core.graph import JointGraph, QueryStatic
 
 REGRESSION_METRICS = ("throughput", "latency_p", "latency_e")
 CLASSIFICATION_METRICS = ("backpressure", "success")
@@ -100,17 +106,61 @@ def _jitted_forward(cfg: CostModelConfig):
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
 
 
-def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
-    """Ensemble prediction in *cost space* (paper SIV-A).
+def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
+    """(E, B) raw outputs -> cost-space prediction (paper SIV-A).
 
     regression: mean over members of expm1(raw); classification: majority vote
     over thresholded member probabilities -> {0,1}.
     """
-    raw = np.asarray(_jitted_forward(cfg)(params, g))  # (E, B)
     if cfg.task == "regression":
         return np.mean(np.expm1(raw), axis=0).clip(min=0.0)
     votes = (raw > 0.0).astype(np.int64)  # logit > 0 <=> p > 0.5
     return (votes.sum(axis=0) * 2 > votes.shape[0]).astype(np.int64)
+
+
+def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Ensemble prediction in *cost space* for a batch of graphs."""
+    return _ensemble_vote(np.asarray(_jitted_forward(cfg)(params, g)), cfg)
+
+
+@lru_cache(maxsize=256)
+def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic):
+    def f(p, skel, a_place):
+        return jax.vmap(lambda pp: apply_gnn_placed(pp, skel, a_place, static, cfg.gnn)[..., 0])(p)
+
+    return jax.jit(f)
+
+
+def predict_placements(
+    params, skel: JointGraph, a_place: jax.Array, static: QueryStatic, cfg: CostModelConfig
+) -> np.ndarray:
+    """Ensemble prediction over candidate placements of ONE query.
+
+    ``skel`` is the shared unbatched skeleton, ``a_place`` the ``(B, O, W)``
+    placement adjacencies.  Numerically equivalent to ``predict`` on the
+    broadcast batch, via the query-specialized forward (jit-cached per
+    (config, query-structure) pair).  Not available for ``traditional_mp``
+    ablation models — those don't have the 3-stage structure the
+    specialization exploits; callers fall back to ``predict``.
+    """
+    assert not cfg.traditional_mp, "use predict() for traditional_mp models"
+    raw = np.asarray(_jitted_placed_forward(cfg, static)(params, skel, a_place))
+    return _ensemble_vote(raw, cfg)
+
+
+def predict_metrics(
+    models: Dict[str, Tuple[object, CostModelConfig]], g: JointGraph
+) -> Dict[str, np.ndarray]:
+    """Score ONE shared graph batch with several per-metric ensembles.
+
+    The placement optimizer's fast path: ``g`` is transferred/donated to the
+    device once and every requested ensemble (target + success/backpressure
+    filters) runs over the same resident batch, instead of rebuilding and
+    re-transferring the batch per metric.  Each metric keeps its own jitted
+    forward (configs differ), but all of them share ``g``'s buffers.
+    """
+    g = jax.tree_util.tree_map(jnp.asarray, g)
+    return {metric: predict(params, g, cfg) for metric, (params, cfg) in models.items()}
 
 
 def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:

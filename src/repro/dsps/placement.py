@@ -65,25 +65,13 @@ def is_acyclic_placement(query: Query, placement: Placement) -> bool:
 
     Checked per root-to-sink path over the sequence of visited hosts.
     """
-    sink = query.sink()
-
-    def paths_from(u: int) -> List[List[int]]:
-        if u == sink:
-            return [[u]]
-        out = []
-        for v in query.children(u):
-            for p in paths_from(v):
-                out.append([u] + p)
-        return out
-
-    for src in query.sources():
-        for path in paths_from(src):
-            hosts = [placement.node_of(op) for op in path]
-            seen: list[int] = []
-            for h in hosts:
-                if seen and h == seen[-1]:
-                    continue
-                if h in seen:
-                    return False
-                seen.append(h)
+    for path in query.root_to_sink_paths():
+        hosts = [placement.node_of(op) for op in path]
+        seen: list[int] = []
+        for h in hosts:
+            if seen and h == seen[-1]:
+                continue
+            if h in seen:
+                return False
+            seen.append(h)
     return True

@@ -184,6 +184,25 @@ class Query:
             depth[u] = 0 if not ps else 1 + max(depth[p] for p in ps)
         return depth
 
+    def root_to_sink_paths(self) -> List[List[int]]:
+        """All source->sink op-id paths (the units of the paper's Fig.-5
+        acyclicity rule: once data leaves a host it must never return)."""
+        sink = self.sink()
+
+        def walk(u: int) -> List[List[int]]:
+            if u == sink:
+                return [[u]]
+            out = []
+            for v in self.children(u):
+                for p in walk(v):
+                    out.append([u] + p)
+            return out
+
+        paths: List[List[int]] = []
+        for src in self.sources():
+            paths.extend(walk(src))
+        return paths
+
     def max_depth(self) -> int:
         return max(self.depths().values()) if self.operators else 0
 

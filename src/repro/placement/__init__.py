@@ -1,8 +1,13 @@
 """Placement selection with COSTREAM (paper SV) + baselines."""
 
 from repro.placement.enumerate import (
+    batch_validity_mask,
+    dedup_assignments,
     enumerate_candidates,
     heuristic_placement,
+    mutate_assignments,
+    sample_assignment_matrix,
+    sample_assignments,
     valid_candidate,
 )
 from repro.placement.optimizer import PlacementOptimizer, OptimizerResult

@@ -1,14 +1,20 @@
-"""Heuristic placement enumeration (paper SV, Fig. 5; after Governor [32]).
+"""Placement candidate enumeration (paper SV, Fig. 5; after Governor [32]).
 
 Candidates respect three IoT-scenario rules:
   (1) operator co-location is allowed,
   (2) data flows from same-or-weaker to stronger hardware bins,
   (3) placements are acyclic (data never returns to a previously left host).
+
+The sampler is fully vectorized: it draws an ``(N, n_ops)`` assignment matrix
+in one topological sweep (NumPy ops across the whole candidate axis) and
+validates all rows with batched checks.  ``enumerate_candidates`` keeps the
+original per-``Placement`` API on top of this path; the optimizer consumes
+the raw matrix directly via ``sample_assignment_matrix``.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Set, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -35,7 +41,6 @@ def heuristic_placement(query: Query, cluster: Cluster) -> Placement:
     placement the paper compares its optimized placements against (Exp 2a) and
     the starting point of the monitoring baseline (Exp 2b).
     """
-    order = np.argsort([(hardware_bin(n), -n.cpu * 0 + n.cpu) for n in cluster.nodes], axis=0)
     by_strength = sorted(
         cluster.nodes, key=lambda n: (hardware_bin(n), n.cpu, n.ram_mb, n.bandwidth_mbps)
     )
@@ -60,6 +65,154 @@ def heuristic_placement(query: Query, cluster: Cluster) -> Placement:
     return p
 
 
+# -- vectorized sampling --------------------------------------------------------
+
+
+def batch_validity_mask(
+    query: Query,
+    cluster: Cluster,
+    assignments: np.ndarray,
+    paths: Optional[List[List[int]]] = None,
+) -> np.ndarray:
+    """Vectorized Fig.-5 rule check over an ``(N, n_ops)`` assignment matrix.
+
+    Row i is True iff ``Placement.of(assignments[i])`` passes
+    ``valid_candidate`` — the batched twin of the scalar predicates in
+    ``repro.dsps.placement`` (kept: they are the readable spec).  ``paths``
+    (placement-invariant) can be precomputed via ``query.root_to_sink_paths``
+    by callers that check many batches of the same query.
+    """
+    assignments = np.asarray(assignments)
+    n = assignments.shape[0]
+    ok = np.ones(n, dtype=bool)
+    if n == 0 or not query.edges:
+        return ok
+    bins = np.asarray(cluster.bins())
+
+    # rule (2): along every logical edge, bins must be non-decreasing
+    e_u = np.asarray([u for u, _ in query.edges])
+    e_v = np.asarray([v for _, v in query.edges])
+    ok &= (bins[assignments[:, e_u]] <= bins[assignments[:, e_v]]).all(axis=1)
+
+    # rule (3): per root->sink path, no host revisited after being left.
+    # With consecutive duplicates treated as staying put: hosts[i] == hosts[j]
+    # (i < j) is a violation iff some hop between them changed host.
+    for path in paths if paths is not None else query.root_to_sink_paths():
+        hosts = assignments[:, path]  # (N, L)
+        L = hosts.shape[1]
+        if L < 3:
+            continue  # a revisit needs at least leave + return
+        changed = hosts[:, 1:] != hosts[:, :-1]  # (N, L-1)
+        pref = np.concatenate(
+            [np.zeros((n, 1), dtype=np.int64), np.cumsum(changed, axis=1)], axis=1
+        )  # (N, L): #host-changes before position j
+        same = hosts[:, :, None] == hosts[:, None, :]  # (N, L, L)
+        moved_between = pref[:, None, :] > pref[:, :, None]  # (N, L, L): i -> j changed host
+        upper = np.triu(np.ones((L, L), dtype=bool), k=2)  # pairs i < j-1
+        ok &= ~(same & moved_between & upper).any(axis=(1, 2))
+    return ok
+
+
+def dedup_assignments(assignments: np.ndarray) -> np.ndarray:
+    """Drop duplicate rows, preserving first-seen order."""
+    if len(assignments) == 0:
+        return assignments
+    _, first = np.unique(assignments, axis=0, return_index=True)
+    return assignments[np.sort(first)]
+
+
+def sample_assignments(
+    query: Query,
+    cluster: Cluster,
+    n: int,
+    rng: np.random.Generator,
+    colocation_bias: float = 0.4,
+) -> np.ndarray:
+    """Draw ``n`` placement candidates at once as an ``(n, n_ops)`` matrix.
+
+    One vectorized pass per operator in topological order: every candidate
+    picks uniformly among hosts whose bin is >= the max bin over its parents'
+    hosts (rule 2 by construction along tree edges), with a ``colocation_bias``
+    chance of reusing a random parent's host instead.  Co-location can still
+    break rule 2 under multi-parent joins and rule 3 is not enforced during
+    the sweep, so rows must be filtered with ``batch_validity_mask``.
+    """
+    bins = np.asarray(cluster.bins())
+    # hosts sorted strongest-bin first: the hosts eligible for a minimum bin b
+    # are exactly a prefix of this order, of length count_ge[b]
+    order_desc = np.argsort(-bins, kind="stable")
+    count_ge = np.asarray([(bins >= b).sum() for b in range(int(bins.max()) + 2)])
+
+    assign = np.zeros((n, query.n_ops()), dtype=np.int64)
+    for u in query.topological_order():
+        parents = query.parents(u)
+        if parents:
+            min_bin = bins[assign[:, parents]].max(axis=1)  # (n,)
+        else:
+            min_bin = np.zeros(n, dtype=np.int64)
+        n_opts = count_ge[min_bin]  # (n,) >= 1: the parent's own host qualifies
+        pick = order_desc[(rng.random(n) * n_opts).astype(np.int64)]
+        if parents:
+            coloc = rng.random(n) < colocation_bias
+            via = np.asarray(parents)[rng.integers(0, len(parents), size=n)]
+            pick = np.where(coloc, assign[np.arange(n), via], pick)
+        assign[:, u] = pick
+    return assign
+
+
+def sample_assignment_matrix(
+    query: Query,
+    cluster: Cluster,
+    k: int,
+    rng: np.random.Generator,
+    max_tries_factor: int = 30,
+    colocation_bias: float = 0.4,
+) -> np.ndarray:
+    """Up to ``k`` distinct valid assignments, shape ``(<=k, n_ops)``.
+
+    Oversamples in vectorized rounds (draw -> validity mask -> dedup) until
+    ``k`` candidates are collected or the tries budget — the same
+    ``k * max_tries_factor`` total draws the old rejection loop allowed — is
+    spent.
+    """
+    budget = k * max_tries_factor
+    paths = query.root_to_sink_paths()
+    pool = np.zeros((0, query.n_ops()), dtype=np.int64)
+    while len(pool) < k and budget > 0:
+        draw = min(max(2 * (k - len(pool)), 32), budget)
+        budget -= draw
+        batch = sample_assignments(query, cluster, draw, rng, colocation_bias)
+        batch = batch[batch_validity_mask(query, cluster, batch, paths)]
+        pool = dedup_assignments(np.concatenate([pool, batch], axis=0))
+    return pool[:k]
+
+
+def mutate_assignments(
+    query: Query,
+    cluster: Cluster,
+    parents: np.ndarray,
+    n_children_per: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """One-op host mutations of parent assignments, validity-filtered.
+
+    Each parent row spawns ``n_children_per`` children with a single random
+    operator moved to a random host; children violating the Fig.-5 rules are
+    dropped and survivors deduplicated.  The refinement loop's move operator:
+    cheap to generate in bulk, and every survivor re-enters the same batched
+    scoring path as the initial candidates.
+    """
+    parents = np.asarray(parents, dtype=np.int64)
+    if parents.size == 0 or n_children_per <= 0:
+        return parents[:0]
+    children = np.repeat(parents, n_children_per, axis=0)
+    n = len(children)
+    ops = rng.integers(0, query.n_ops(), size=n)
+    children[np.arange(n), ops] = rng.integers(0, cluster.n_nodes(), size=n)
+    children = children[batch_validity_mask(query, cluster, children)]
+    return dedup_assignments(children)
+
+
 def enumerate_candidates(
     query: Query,
     cluster: Cluster,
@@ -68,40 +221,5 @@ def enumerate_candidates(
     max_tries_factor: int = 30,
 ) -> List[Placement]:
     """Sample up to ``k`` distinct rule-respecting placement candidates."""
-    bins = cluster.bins()
-    nodes_by_bin: List[List[int]] = [[], [], []]
-    for i, b in enumerate(bins):
-        nodes_by_bin[b].append(i)
-
-    depths = query.depths()
-    topo = query.topological_order()
-    out: List[Placement] = []
-    seen: Set[Tuple[int, ...]] = set()
-    tries = 0
-    while len(out) < k and tries < k * max_tries_factor:
-        tries += 1
-        assign = [-1] * query.n_ops()
-        ok = True
-        for u in topo:
-            parents = query.parents(u)
-            min_bin = max((bins[assign[p]] for p in parents), default=0)
-            # choose a host with bin >= min_bin, biased towards staying close
-            options = [i for i in range(cluster.n_nodes()) if bins[i] >= min_bin]
-            if not options:
-                ok = False
-                break
-            # co-location bias: reuse a parent's host 40% of the time
-            if parents and rng.random() < 0.4:
-                assign[u] = assign[parents[int(rng.integers(0, len(parents)))]]
-            else:
-                assign[u] = int(options[int(rng.integers(0, len(options)))])
-        if not ok:
-            continue
-        p = Placement.of(assign)
-        if p.assignment in seen:
-            continue
-        if not valid_candidate(query, cluster, p):
-            continue
-        seen.add(p.assignment)
-        out.append(p)
-    return out
+    matrix = sample_assignment_matrix(query, cluster, k, rng, max_tries_factor)
+    return [Placement.of(row) for row in matrix]

@@ -1,0 +1,119 @@
+"""Property-testing compat layer: real ``hypothesis`` when installed, else a
+seeded-random fallback.
+
+The suite only uses a small subset of hypothesis — ``@given`` over
+``st.integers(lo, hi)`` / ``st.floats(lo, hi, allow_nan=False)`` plus
+``@settings(max_examples=..., deadline=...)`` — so the fallback implements
+exactly that: each ``@given`` test becomes a single pytest test that draws
+``max_examples`` example tuples from a deterministic per-test RNG and runs the
+body once per tuple.  Draws are reproducible across runs and machines (seeded
+from the test name), so failures are repeatable; the failing example values
+are attached to the assertion via ``pytest.fail`` chaining.
+
+Usage (identical under both backends):
+
+    from _propcheck import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import zlib
+
+    import numpy as np
+
+    DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw rule: maps an ``np.random.Generator`` to one example."""
+
+        def __init__(self, draw, label):
+            self._draw = draw
+            self.label = label
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self.label
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            # uniform over [lo, hi]; hypothesis shrinks/edge-biases, we don't —
+            # determinism and bounds are what the suite relies on.
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                f"floats({min_value}, {max_value})",
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            pool = list(elements)
+            return _Strategy(
+                lambda rng: pool[int(rng.integers(0, len(pool)))],
+                f"sampled_from({pool!r})",
+            )
+
+    def given(*strats, **kw_strats):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def runner(**fixtures):
+                n = getattr(runner, "_propcheck_max_examples", DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    args = tuple(s.example(rng) for s in strats)
+                    kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, **kwargs, **fixtures)
+                    except BaseException as e:
+                        raise AssertionError(
+                            f"falsifying example #{i + 1}/{n}: "
+                            f"args={args!r} kwargs={kwargs!r}"
+                        ) from e
+
+            # hide the strategy-bound parameters from pytest's fixture
+            # resolution: the wrapper only exposes genuinely free parameters.
+            runner._propcheck_max_examples = DEFAULT_MAX_EXAMPLES
+            runner.__signature__ = _free_signature(fn, len(strats), set(kw_strats))
+            return runner
+
+        return decorate
+
+    def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def _free_signature(fn, n_positional, kw_names):
+        import inspect
+
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[n_positional:]
+        params = [p for p in params if p.name not in kw_names]
+        return sig.replace(parameters=params)
+
+
+st = strategies
+
+__all__ = ["given", "settings", "strategies", "st", "HAVE_HYPOTHESIS"]
