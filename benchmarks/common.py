@@ -132,11 +132,21 @@ class FlatRanker:
             if artifacts.exists("flat", name):
                 self.models[metric] = artifacts.load_flat_model(name)
 
-    def pick(self, query, cluster, candidates, target="latency_p"):
-        from repro.core.flat_vector import featurize_flat
+    def pick(self, query, cluster, assignments: np.ndarray, target="latency_p"):
+        """Best candidate from an ``(N, n_ops)`` assignment matrix.
 
-        x = np.stack([featurize_flat(query, cluster, p) for p in candidates])
-        feasible = np.ones(len(candidates), dtype=bool)
+        Consumes the same raw matrix form as ``PlacementOptimizer`` (the
+        ``List[Placement]`` wrapper is gone); rows are converted to
+        ``Placement`` only at the featurizer boundary and for the winner.
+        """
+        from repro.core.flat_vector import featurize_flat
+        from repro.dsps.placement import Placement
+
+        assignments = np.asarray(assignments, dtype=np.int64)
+        x = np.stack(
+            [featurize_flat(query, cluster, Placement.of(row)) for row in assignments]
+        )
+        feasible = np.ones(len(assignments), dtype=bool)
         for m in ("success", "backpressure"):
             if m in self.models:
                 params, cfg = self.models[m]
@@ -146,7 +156,7 @@ class FlatRanker:
         params, cfg = self.models[target]
         scores = predict_flat(params, x, cfg.task)
         masked = np.where(feasible, scores, np.inf)
-        return candidates[int(np.argmin(masked))]
+        return Placement.of(assignments[int(np.argmin(masked))])
 
 
 def fmt_table(rows: List[Dict], cols: List[str]) -> str:

@@ -17,9 +17,9 @@ from repro.dsps import WorkloadGenerator, simulate
 from repro.dsps.simulator import SimulatorConfig
 from repro.placement import (
     PlacementOptimizer,
-    enumerate_candidates,
     heuristic_placement,
     online_monitoring_run,
+    sample_assignment_matrix,
 )
 
 SIM = SimulatorConfig(noise_sigma=0.0)  # placement quality measured noise-free
@@ -44,8 +44,8 @@ def exp2a(n_queries: int = 50, k: int = 48, seed: int = 1234):
             cs_lat = simulate(q, c, res.placement, SIM).latency_p
             speed_cs.append(base_lat / max(cs_lat, 1e-9))
 
-            cands = enumerate_candidates(q, c, k, rng)
-            if cands and flat.models:
+            cands = sample_assignment_matrix(q, c, k, rng)
+            if len(cands) and flat.models:
                 fv_p = flat.pick(q, c, cands)
                 fv_lat = simulate(q, c, fv_p, SIM).latency_p
                 speed_fv.append(base_lat / max(fv_lat, 1e-9))

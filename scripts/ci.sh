@@ -10,6 +10,8 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo "== placement scoring perf (quick) =="
-# the fast path must build each candidate graph exactly once (asserted inside)
-# and stay well ahead of the seed per-metric-rebuild path
-python benchmarks/placement_bench.py --quick --min-speedup 3
+# the fast path must build each candidate graph exactly once (asserted inside),
+# stay well ahead of the seed per-metric-rebuild path, and the fused/pallas
+# scoring ratios must not regress >10% below the recorded baseline
+python benchmarks/placement_bench.py --quick --min-speedup 3 \
+  --baseline benchmarks/baselines/placement_bench_quick.json --max-regression 0.10

@@ -56,13 +56,49 @@ def init_gnn(key: jax.Array, cfg: GNNConfig) -> nn.Params:
     }
 
 
-def _apply_bank(params, x, cfg: GNNConfig):
-    """Type-specific MLP over the canonical slot layout (see graph.SLOT_RANGES)."""
+def _require_fusable(params: nn.Params, what: str) -> None:
+    """``use_pallas`` must fail loudly, never silently fall back to jnp.
+
+    The Pallas banked-MLP / mp-update kernels fuse exactly two layers; configs
+    with a different depth cannot be routed through them, and pretending they
+    were would make ``use_pallas`` a lie (the bug this guard exists to kill).
+    """
+    n = len(params["layers"])
+    if n != 2:
+        raise NotImplementedError(
+            f"GNNConfig.use_pallas=True but '{what}' has {n} layers; the Pallas "
+            "kernels fuse exactly two (enc_layers=update_layers=2). Use a "
+            "2-layer config or set use_pallas=False."
+        )
+
+
+def _apply_bank(params, x, cfg: GNNConfig, ranges=SLOT_RANGES):
+    """Type-specific MLP over a slot layout (default: graph.SLOT_RANGES)."""
     if cfg.use_pallas:
         from repro.kernels.banked_mlp import ops as bank_ops
 
-        return bank_ops.banked_mlp_slotted(params, x, SLOT_RANGES)
-    return nn.apply_mlp_bank_slotted(params, x, SLOT_RANGES)
+        _require_fusable(params, "banked MLP (op_enc/op_upd)")
+        return bank_ops.banked_mlp_slotted(params, x, ranges)
+    return nn.apply_mlp_bank_slotted(params, x, ranges)
+
+
+def _apply_shared(params, x, cfg: GNNConfig, what: str):
+    """Shared (non-type-specific) MLP, e.g. hw_enc / hw_upd.
+
+    Under ``use_pallas`` this routes through the banked-MLP kernel as a
+    single-type bank covering the whole node axis — one slot range spanning
+    all rows — so the hardware-side stages run in the same fused VMEM pass as
+    the operator banks instead of silently staying on the jnp path.
+    """
+    if cfg.use_pallas:
+        from repro.kernels.banked_mlp import ops as bank_ops
+
+        _require_fusable(params, what)
+        bank = {
+            "layers": [{"w": l["w"][None], "b": l["b"][None]} for l in params["layers"]]
+        }
+        return bank_ops.banked_mlp_slotted(bank, x, ((0, 0, x.shape[-2]),))
+    return nn.apply_mlp(params, x)
 
 
 def apply_gnn(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
@@ -72,12 +108,13 @@ def apply_gnn(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
 
     # stage 0: type-specific encoders
     h_ops = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
-    h_hw = nn.apply_mlp(params["hw_enc"], g.hw_x) * hw_mask
+    h_hw = _apply_shared(params["hw_enc"], g.hw_x, cfg, "hw_enc") * hw_mask
 
     # stage 1: OPS -> HW (co-located operators sum into their host)
     msg_hw = g.a_place.T @ h_ops  # (W,H)
     h_hw = (
-        nn.apply_mlp(params["hw_upd"], jnp.concatenate([h_hw, msg_hw], axis=-1)) * hw_mask
+        _apply_shared(params["hw_upd"], jnp.concatenate([h_hw, msg_hw], axis=-1), cfg, "hw_upd")
+        * hw_mask
     )
 
     # stage 2: HW -> OPS (each operator reads its host's updated state)
@@ -126,6 +163,89 @@ def _bank_member(p: nn.Params, t: int) -> nn.Params:
     return {"layers": [{"w": l["w"][t], "b": l["b"][t]} for l in p["layers"]]}
 
 
+def _placed_stages123(
+    params: nn.Params,
+    h_ops0: jax.Array,  # (O', H) stage-0 operator states (any slot layout)
+    h_hw0: jax.Array,  # (W', H) stage-0 host states
+    a_place: jax.Array,  # (B, O', W')
+    a_flow: jax.Array,  # (O', O')
+    op_depth: jax.Array,  # (O',) int
+    updates,  # per-depth ((row, type, parent_rows), ...) in THIS layout
+    ranges,  # slot ranges (type, start, stop) in THIS layout
+    cfg: GNNConfig,
+    op_mask: Optional[jax.Array] = None,  # (O',1) or None when no padded rows
+    hw_mask: Optional[jax.Array] = None,  # (W',1) or None when no padded rows
+    pallas_levels=None,  # per-depth (d, row_span, level_ranges) for mp_update
+) -> jax.Array:
+    """Stages 1-3 + readout of the placement-specialized forward.
+
+    Layout-agnostic core shared by ``apply_gnn_placed`` (full padded slot
+    layout) and ``apply_gnn_placed_stacked`` (trimmed active-slot layout,
+    where the masks are provably all-ones and passed as None).  Under
+    ``use_pallas``, stage 3 walks ``pallas_levels``: one fused ``mp_update``
+    launch per depth level, statically restricted to ``row_span`` when the
+    layout makes each level contiguous (the depth-sorted trimmed layout).
+    """
+    b = a_place.shape[0]
+
+    # stage 1: OPS -> HW per candidate
+    msg_hw = jnp.einsum("bow,oh->bwh", a_place, h_ops0)
+    h_hw = _apply_shared(
+        params["hw_upd"],
+        jnp.concatenate([jnp.broadcast_to(h_hw0, (b,) + h_hw0.shape), msg_hw], axis=-1),
+        cfg,
+        "hw_upd",
+    )
+    if hw_mask is not None:
+        h_hw = h_hw * hw_mask
+
+    # stage 2: HW -> OPS per candidate
+    msg_ops = jnp.einsum("bow,bwh->boh", a_place, h_hw)
+    h = _apply_bank(
+        params["op_upd"],
+        jnp.concatenate([jnp.broadcast_to(h_ops0, (b,) + h_ops0.shape), msg_ops], axis=-1),
+        cfg,
+        ranges,
+    )
+    if op_mask is not None:
+        h = h * op_mask
+
+    # stage 3: data-flow sweep over only the depth levels the query has
+    if cfg.use_pallas:
+        from repro.kernels.mp_update import ops as mp_ops
+
+        _require_fusable(params["op_upd"], "op_upd (stage-3 mp_update)")
+        mask_vec = op_mask[:, 0] if op_mask is not None else jnp.ones_like(op_depth, jnp.float32)
+        if pallas_levels is None:  # full layout: no contiguous spans available
+            pallas_levels = tuple(
+                (d, None, ranges, None) for d, level in enumerate(updates, start=1) if level
+            )
+        for d, span, level_ranges, parent_hi in pallas_levels:
+            h = mp_ops.mp_update(
+                params["op_upd"],
+                h,
+                a_flow,
+                op_depth,
+                mask_vec,
+                jnp.asarray(d, op_depth.dtype),
+                level_ranges,
+                row_span=span,
+                parent_rows=parent_hi,
+            )
+    else:
+        for level in updates:
+            cols = [s for s, _, _ in level]
+            news = []
+            for s, t, parents in level:
+                msg = sum(h[:, p] for p in parents[1:]) + h[:, parents[0]]
+                x = jnp.concatenate([h[:, s], msg], axis=-1)  # (B, 2H)
+                news.append(nn.apply_mlp(_bank_member(params["op_upd"], t), x))
+            h = h.at[:, jnp.asarray(cols)].set(jnp.stack(news, axis=1))
+
+    pooled = jnp.sum(h, axis=1) + jnp.sum(h_hw, axis=1)  # rows are pre-masked
+    return nn.apply_mlp(params["out"], pooled)
+
+
 def apply_gnn_placed(
     params: nn.Params,
     skel: JointGraph,
@@ -141,55 +261,160 @@ def apply_gnn_placed(
 
       * stage 0 encoders run ONCE on the unbatched skeleton (placement-
         invariant) and are broadcast, not recomputed per candidate;
-      * the stage-3 data-flow sweep is unrolled over ``static.updates``,
-        touching only the slots that hold an operator at each depth level —
-        O(n_ops) narrow matmuls instead of O(MAX_DEPTH * MAX_OPS) masked ones,
-        and depth levels past the query's true depth (provable no-ops) vanish.
+      * the stage-3 data-flow sweep only touches depth levels the query
+        actually has (``static.updates``): on the jnp path each level updates
+        just the slots holding an operator at that depth (narrow matmuls); on
+        the Pallas path each level is one fused ``mp_update`` launch.
 
-    Always uses the jnp banked MLPs; ``cfg.use_pallas`` only routes the
-    generic per-graph path through the kernels.
+    ``cfg.use_pallas`` is honored on every stage: the stage-0 encoders and
+    stage-1/2 updates route through ``kernels/banked_mlp`` (the shared
+    hardware MLPs as single-type banks) and the stage-3 sweep through
+    ``kernels/mp_update``.  The kernel ops pick a lowering per backend —
+    Pallas on TPU, the jnp oracle elsewhere, ``REPRO_PALLAS_INTERPRET=1``
+    forces the interpreter (see ``kernels.active_lowering``).  The readout
+    MLP stays jnp by design — one tiny dense GEMM with no banked/slotted
+    structure for the kernels to fuse. Configs the kernels cannot fuse raise
+    loudly instead of silently falling back (see ``_require_fusable``).
     """
     op_mask = skel.op_mask[:, None]  # (O,1)
     hw_mask = skel.hw_mask[:, None]  # (W,1)
-    b = a_place.shape[0]
 
     # stage 0: shared across candidates
-    h_ops0 = nn.apply_mlp_bank_slotted(params["op_enc"], skel.op_x, SLOT_RANGES) * op_mask
-    h_hw0 = nn.apply_mlp(params["hw_enc"], skel.hw_x) * hw_mask
+    h_ops0 = _apply_bank(params["op_enc"], skel.op_x, cfg) * op_mask
+    h_hw0 = _apply_shared(params["hw_enc"], skel.hw_x, cfg, "hw_enc") * hw_mask
 
-    # stage 1: OPS -> HW per candidate
-    msg_hw = jnp.einsum("bow,oh->bwh", a_place, h_ops0)
-    h_hw = (
-        nn.apply_mlp(
-            params["hw_upd"],
-            jnp.concatenate([jnp.broadcast_to(h_hw0, (b,) + h_hw0.shape), msg_hw], axis=-1),
-        )
-        * hw_mask
+    return _placed_stages123(
+        params,
+        h_ops0,
+        h_hw0,
+        a_place,
+        skel.a_flow,
+        skel.op_depth,
+        static.updates,
+        SLOT_RANGES,
+        cfg,
+        op_mask=op_mask,
+        hw_mask=hw_mask,
     )
 
-    # stage 2: HW -> OPS per candidate
-    msg_ops = jnp.einsum("bow,bwh->boh", a_place, h_hw)
-    h = (
-        nn.apply_mlp_bank_slotted(
-            params["op_upd"],
-            jnp.concatenate([jnp.broadcast_to(h_ops0, (b,) + h_ops0.shape), msg_ops], axis=-1),
-            SLOT_RANGES,
-        )
-        * op_mask
+
+def _slot_type(slot: int) -> int:
+    for t, start, stop in SLOT_RANGES:
+        if start <= slot < stop:
+            return t
+    raise ValueError(f"slot {slot} outside SLOT_RANGES")
+
+
+def _type_runs(order, offset: int = 0):
+    """Maximal runs of equal node type over ``order`` as (type, start, stop)."""
+    runs = []
+    for i, s in enumerate(order):
+        t = _slot_type(s)
+        if runs and runs[-1][0] == t:
+            runs[-1][2] = offset + i + 1
+        else:
+            runs.append([t, offset + i, offset + i + 1])
+    return tuple(tuple(r) for r in runs)
+
+
+def _trimmed_layout(static: QueryStatic):
+    """Trace-time remap of the padded slot layout to active slots only,
+    ordered by (depth, slot).
+
+    Depth-major order makes every stage-3 level one CONTIGUOUS row span, so
+    the Pallas ``mp_update`` can statically restrict each depth step to the
+    rows it actually updates (``row_span``); within a level, slot order keeps
+    same-type operators adjacent, so banked MLPs still see few type runs.
+    Returns (order: slot ids, ranges: type runs over the whole order,
+    updates: stage-3 updates remapped to row positions, levels: per nonempty
+    depth level (d, (start, stop) row span, type runs inside the span)).
+    """
+    depth_of = {s: 0 for s in static.active}
+    for d, level in enumerate(static.updates, start=1):
+        for s, _, _ in level:
+            depth_of[s] = d
+    order = sorted(static.active, key=lambda s: (depth_of[s], s))
+    pos = {s: i for i, s in enumerate(order)}
+    updates = tuple(
+        tuple((pos[s], t, tuple(pos[p] for p in parents)) for s, t, parents in level)
+        for level in static.updates
     )
+    levels = []
+    for d, level in enumerate(static.updates, start=1):
+        if not level:
+            continue
+        rows = sorted(pos[s] for s, _, _ in level)
+        assert rows == list(range(rows[0], rows[-1] + 1)), "level not contiguous"
+        span = (rows[0], rows[-1] + 1)
+        # parents have strictly smaller depth, i.e. strictly earlier rows
+        levels.append((d, span, _type_runs(order[span[0] : span[1]], offset=span[0]), span[0]))
+    return tuple(order), _type_runs(order), updates, tuple(levels)
 
-    # stage 3: data-flow sweep, unrolled over the static structure
-    for level in static.updates:
-        cols = [s for s, _, _ in level]
-        news = []
-        for s, t, parents in level:
-            msg = sum(h[:, p] for p in parents[1:]) + h[:, parents[0]]
-            x = jnp.concatenate([h[:, s], msg], axis=-1)  # (B, 2H)
-            news.append(nn.apply_mlp(_bank_member(params["op_upd"], t), x))
-        h = h.at[:, jnp.asarray(cols)].set(jnp.stack(news, axis=1))
 
-    pooled = jnp.sum(h, axis=1) + jnp.sum(h_hw, axis=1)  # rows are pre-masked
-    return nn.apply_mlp(params["out"], pooled)
+def apply_gnn_placed_stacked(
+    params: nn.Params,
+    skel: JointGraph,
+    a_place: jax.Array,
+    static: QueryStatic,
+    cfg: GNNConfig,
+    n_hw: int,
+    chunk: int = 256,
+) -> jax.Array:
+    """ONE forward for a whole stack of ensembles: ``params`` leaves carry a
+    leading member axis (ensemble members x metrics, see
+    ``model.stack_metric_models``); returns ``(members, B)`` raw outputs.
+
+    Beyond fusing the per-(metric, member) launches of ``apply_gnn_placed``
+    into one vmapped call per stage, the restructure buys two things the
+    per-metric path cannot express:
+
+      * **slot trimming** — every stage runs on the ``len(static.active)``
+        slots that hold a real operator and the ``n_hw`` real hosts, not the
+        MAX_OPS/MAX_HW padded layout: the padded rows are provably zero
+        (masked before every reduction), so dropping them changes no
+        prediction while cutting the wasted dense FLOPs;
+      * **batch chunking** — with all members resident at once, the candidate
+        axis is scanned in ``chunk``-sized panels so the per-stage activation
+        working set stays cache-resident on CPU-class backends (a no-op for
+        ``B <= chunk``; pass ``chunk=0`` to disable).
+
+    ``cfg.use_pallas`` routes through the same kernels as
+    ``apply_gnn_placed``, with the trimmed type runs as the kernels' slot
+    layout and each stage-3 depth level as a static ``row_span`` for
+    ``mp_update`` (the depth-major trimmed order makes levels contiguous).
+    """
+    order, ranges, updates, levels = _trimmed_layout(static)
+    idx = jnp.asarray(order)
+    op_x = skel.op_x[idx]  # (n, F)
+    hw_x = skel.hw_x[:n_hw]  # (n_hw, F_hw)
+    a_flow = skel.a_flow[idx][:, idx]  # (n, n)
+    op_depth = skel.op_depth[idx]  # (n,)
+    a_place = a_place[:, idx, :n_hw]  # (B, n, n_hw)
+    B = a_place.shape[0]
+
+    # stage 0 is placement-invariant: once per member, outside the chunk scan
+    def stage0(pp):
+        return (
+            _apply_bank(pp["op_enc"], op_x, cfg, ranges),
+            _apply_shared(pp["hw_enc"], hw_x, cfg, "hw_enc"),
+        )
+
+    h0_ops, h0_hw = jax.vmap(stage0)(params)  # (E, n, H), (E, n_hw, H)
+
+    def member_fwd(pp, h_ops0, h_hw0, ap):
+        return _placed_stages123(
+            pp, h_ops0, h_hw0, ap, a_flow, op_depth, updates, ranges, cfg,
+            pallas_levels=levels,
+        )[..., 0]
+
+    fwd = jax.vmap(member_fwd, in_axes=(0, 0, 0, None))
+    if chunk and B > chunk and B % chunk == 0:
+        panels = a_place.reshape(B // chunk, chunk, *a_place.shape[1:])
+        _, outs = jax.lax.scan(
+            lambda carry, ap: (carry, fwd(params, h0_ops, h0_hw, ap)), None, panels
+        )  # (B/chunk, E, chunk)
+        return outs.transpose(1, 0, 2).reshape(outs.shape[1], B)
+    return fwd(params, h0_ops, h0_hw, a_place)
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +430,7 @@ def apply_gnn_traditional(
     hw_mask = g.hw_mask[:, None]
 
     h_ops = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
-    h_hw = nn.apply_mlp(params["hw_enc"], g.hw_x) * hw_mask
+    h_hw = _apply_shared(params["hw_enc"], g.hw_x, cfg, "hw_enc") * hw_mask
 
     # symmetric adjacency: data flow (both directions) + placement (both ways)
     a_sym = g.a_flow + g.a_flow.T  # (O,O)
@@ -219,7 +444,8 @@ def apply_gnn_traditional(
             * op_mask
         )
         h_w2 = (
-            nn.apply_mlp(params["hw_upd"], jnp.concatenate([h_w, msg_w], axis=-1)) * hw_mask
+            _apply_shared(params["hw_upd"], jnp.concatenate([h_w, msg_w], axis=-1), cfg, "hw_upd")
+            * hw_mask
         )
         return (h_o2, h_w2), None
 

@@ -8,6 +8,7 @@ graphs when arrays carry a leading batch dim; ``batch_graphs`` stacks singles.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -127,6 +128,25 @@ def build_graph_skeleton(
         hw_mask=hw_mask,
         a_flow=a_flow,
         a_place=a_place,
+    )
+
+
+def skeleton_cache_key(query: Query, cluster: Cluster) -> Tuple:
+    """Hashable structural fingerprint of the skeleton-determining inputs.
+
+    Two (query, cluster) pairs with equal keys featurize to identical
+    ``build_graph_skeleton`` outputs and ``query_static`` summaries: the key
+    covers every operator field (``dataclasses.astuple`` recurses into
+    ``WindowSpec``), the logical edges, and the hardware nodes — but not
+    ``query.name``, which never reaches the featurizer.  Computing it is
+    O(n_ops + n_hw) tuple building, far cheaper than the skeleton
+    featurization + device transfer it lets callers amortize (the
+    online-monitoring pattern re-scores the same query every round).
+    """
+    return (
+        tuple(dataclasses.astuple(op) for op in query.operators),
+        tuple(query.edges),
+        tuple(cluster.nodes),
     )
 
 

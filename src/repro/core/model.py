@@ -11,17 +11,19 @@ as SIV-A prescribes.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import nn
+from repro.kernels import active_lowering
 from repro.core.gnn import (
     GNNConfig,
     apply_gnn_batch,
     apply_gnn_placed,
+    apply_gnn_placed_stacked,
     apply_gnn_traditional,
     init_gnn,
 )
@@ -101,8 +103,13 @@ def ensemble_loss(params, g: JointGraph, y: jax.Array, cfg: CostModelConfig) -> 
 from functools import lru_cache
 
 
+# every cached factory below takes the kernels' active lowering as part of
+# its key: the lowering is read at trace time, so without it a flipped
+# REPRO_PALLAS_INTERPRET after the first call would silently reuse stale traces
+
+
 @lru_cache(maxsize=64)
-def _jitted_forward(cfg: CostModelConfig):
+def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
 
 
@@ -120,11 +127,116 @@ def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
 
 def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
     """Ensemble prediction in *cost space* for a batch of graphs."""
-    return _ensemble_vote(np.asarray(_jitted_forward(cfg)(params, g)), cfg)
+    raw = _jitted_forward(cfg, active_lowering())(params, g)
+    return _ensemble_vote(np.asarray(raw), cfg)
+
+
+# -- fused multi-metric ensembles -------------------------------------------------
+#
+# The per-metric GNNs share one architecture (paper SIV-A: same GNNConfig,
+# different training targets), so their ensemble params are shape-identical
+# pytrees with a leading (E,) member axis.  Stacking them along that axis
+# turns "one forward per (metric, member)" into ONE vmapped forward whose
+# leading axis is sum(E_m) — a single kernel launch per GNN stage instead of
+# len(metrics) * E launches, which is where placement scoring spends its time
+# (dispatch overhead dominates these small graphs).
+
+
+class StackedEnsembles(NamedTuple):
+    """Per-metric ensembles fused along the leading member axis.
+
+    ``params`` leaves have shape ``(sum of member counts, ...)``; metric ``m``
+    owns rows ``[offsets[i], offsets[i] + sizes[i])``.  Hashable-free (holds
+    arrays), so it is passed positionally into jitted forwards that are cached
+    on the shared ``GNNConfig`` instead.
+    """
+
+    params: object  # pytree, leaves stacked along axis 0
+    metrics: Tuple[str, ...]
+    cfgs: Tuple[CostModelConfig, ...]
+    sizes: Tuple[int, ...]  # members per metric, in ``metrics`` order
+
+
+def stack_metric_models(
+    models: Dict[str, Tuple[object, CostModelConfig]],
+    metrics: Optional[Sequence[str]] = None,
+) -> StackedEnsembles:
+    """Fuse several per-metric (params, cfg) ensembles into one stack.
+
+    Requires every model to share the same ``GNNConfig`` and ``traditional_mp``
+    flag (the forwards must be structurally identical to share a trace);
+    raises ``ValueError`` otherwise so callers can fall back to the per-metric
+    loop explicitly.  Member counts may differ — leaves are concatenated, not
+    stacked, so metric i contributes ``sizes[i]`` rows.
+    """
+    names = tuple(metrics) if metrics is not None else tuple(models)
+    assert names, "no metrics to stack"
+    cfgs = tuple(models[m][1] for m in names)
+    for c in cfgs[1:]:
+        if c.gnn != cfgs[0].gnn or c.traditional_mp != cfgs[0].traditional_mp:
+            raise ValueError(
+                "cannot fuse metric ensembles with differing GNN configs: "
+                f"{cfgs[0].metric}={cfgs[0].gnn} vs {c.metric}={c.gnn} "
+                f"(traditional_mp {cfgs[0].traditional_mp} vs {c.traditional_mp})"
+            )
+    sizes = []
+    for m in names:
+        leaf = jax.tree_util.tree_leaves(models[m][0])[0]
+        sizes.append(int(leaf.shape[0]))
+    stacked = jax.tree_util.tree_map(
+        lambda *leaves: jnp.concatenate([jnp.asarray(l) for l in leaves], axis=0),
+        *[models[m][0] for m in names],
+    )
+    return StackedEnsembles(stacked, names, cfgs, tuple(sizes))
+
+
+def _split_votes(raw: np.ndarray, stacked: StackedEnsembles) -> Dict[str, np.ndarray]:
+    """(sum_E, B) fused raw outputs -> per-metric cost-space predictions."""
+    out, off = {}, 0
+    for m, cfg, sz in zip(stacked.metrics, stacked.cfgs, stacked.sizes):
+        out[m] = _ensemble_vote(raw[off : off + sz], cfg)
+        off += sz
+    return out
+
+
+@lru_cache(maxsize=64)
+def _jitted_forward_stacked(gnn: GNNConfig, traditional_mp: bool, lowering: str = "ref"):
+    # metric only selects the loss/vote, never the forward; any metric works
+    cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
+    return jax.jit(lambda p, g: jax.vmap(lambda pp: _forward_single(pp, g, cfg))(p))
 
 
 @lru_cache(maxsize=256)
-def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic):
+def _jitted_placed_forward_stacked(
+    gnn: GNNConfig, static: QueryStatic, n_hw: int, lowering: str = "ref"
+):
+    def f(p, skel, a_place):
+        return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw)
+
+    return jax.jit(f)
+
+
+def predict_placements_fused(
+    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
+) -> Dict[str, np.ndarray]:
+    """All metrics' ensembles over one query's candidate placements, fused.
+
+    One jitted ``apply_gnn_placed_stacked`` call evaluates every (metric,
+    member) pair in a single launch per GNN stage, on the trimmed active-slot
+    layout; the raw ``(sum_E, B)`` block is then split back per metric and
+    voted exactly like ``predict_placements`` (the stacked-vs-loop
+    equivalence test pins this to float tolerance).
+    """
+    assert not stacked.cfgs[0].traditional_mp, "use predict() for traditional_mp models"
+    n_hw = int(np.asarray(skel.hw_mask).sum())
+    fwd = _jitted_placed_forward_stacked(
+        stacked.cfgs[0].gnn, static, n_hw, active_lowering()
+    )
+    return _split_votes(np.asarray(fwd(stacked.params, skel, a_place)), stacked)
+
+
+@lru_cache(maxsize=256)
+def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: str = "ref"):
     def f(p, skel, a_place):
         return jax.vmap(lambda pp: apply_gnn_placed(pp, skel, a_place, static, cfg.gnn)[..., 0])(p)
 
@@ -144,8 +256,8 @@ def predict_placements(
     specialization exploits; callers fall back to ``predict``.
     """
     assert not cfg.traditional_mp, "use predict() for traditional_mp models"
-    raw = np.asarray(_jitted_placed_forward(cfg, static)(params, skel, a_place))
-    return _ensemble_vote(raw, cfg)
+    fwd = _jitted_placed_forward(cfg, static, active_lowering())
+    return _ensemble_vote(np.asarray(fwd(params, skel, a_place)), cfg)
 
 
 def predict_metrics(
@@ -153,14 +265,24 @@ def predict_metrics(
 ) -> Dict[str, np.ndarray]:
     """Score ONE shared graph batch with several per-metric ensembles.
 
-    The placement optimizer's fast path: ``g`` is transferred/donated to the
-    device once and every requested ensemble (target + success/backpressure
-    filters) runs over the same resident batch, instead of rebuilding and
-    re-transferring the batch per metric.  Each metric keeps its own jitted
-    forward (configs differ), but all of them share ``g``'s buffers.
+    The generic multi-metric path: ``g`` is transferred to the device once and
+    every requested ensemble (target + success/backpressure filters) runs over
+    the same resident batch.  When the per-metric GNN configs are
+    shape-identical (the COSTREAM default — same architecture, different
+    training targets) the ensembles are additionally fused into ONE stacked
+    vmapped forward (see ``stack_metric_models``): a single launch per GNN
+    stage instead of one forward per (metric, member).  Heterogeneous configs
+    fall back to a per-metric loop over the shared batch.
     """
     g = jax.tree_util.tree_map(jnp.asarray, g)
-    return {metric: predict(params, g, cfg) for metric, (params, cfg) in models.items()}
+    try:
+        stacked = stack_metric_models(models)
+    except ValueError:  # mixed architectures: per-metric forwards, shared batch
+        return {m: predict(params, g, cfg) for m, (params, cfg) in models.items()}
+    fwd = _jitted_forward_stacked(
+        stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, active_lowering()
+    )
+    return _split_votes(np.asarray(fwd(stacked.params, g)), stacked)
 
 
 def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:

@@ -10,6 +10,30 @@ wrapper with custom_vjp, ref.py = pure-jnp oracle):
 * ``rglru``       — chunked RG-LRU linear recurrence (RecurrentGemma blocks),
   VMEM-tiled over (batch, channel) with sequential in-kernel time loop.
 
-On CPU all kernels run under ``interpret=True`` (the container has no TPU);
-the BlockSpecs are written for TPU v5e VMEM (16 MiB/core) and MXU alignment.
+Per-backend lowering (``active_lowering``): on TPU the ops run the Pallas
+kernels; on other backends they lower to the jnp oracles (compiled XLA, no
+interpreter emulation tax) unless ``REPRO_PALLAS_INTERPRET=1`` forces the
+Pallas interpreter — slow, used by the parity tests to execute the actual
+kernel bodies.  The BlockSpecs are written for TPU v5e VMEM (16 MiB/core)
+and MXU alignment.
 """
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def active_lowering() -> str:
+    """'pallas' (TPU) | 'interpret' (forced via env) | 'ref' (other backends).
+
+    Read at TRACE time: jitted callers that cache traces must include this
+    value in their cache key, or a later env-var flip silently keeps the old
+    lowering (see ``core.model``'s jitted forwards).
+    """
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return "interpret"
+    return "ref"

@@ -1,9 +1,15 @@
 """jit'd public wrapper for the banked-MLP kernel.
 
-Forward runs the Pallas kernel (interpret=True on CPU); backward delegates to
-the VJP of the jnp oracle via custom_vjp, so the op is trainable everywhere.
-Accepts (N, F) single graphs (auto-batched) or (B, N, F) batches; arbitrary
-leading dims via vmap are supported by the Pallas batching rule.
+Per-backend lowering (``_lowering``): on TPU the forward runs the Pallas
+kernel; off-TPU it lowers to the jnp oracle — the SAME function that provides
+the backward pass everywhere — so CPU runs stay fast-compiled instead of
+paying the Pallas interpreter's emulation tax.  Set
+``REPRO_PALLAS_INTERPRET=1`` to force the interpreter off-TPU (slow; the
+kernel parity tests use it to execute the actual kernel body).  Backward
+always delegates to the VJP of the jnp oracle via custom_vjp, so the op is
+trainable everywhere.  Accepts (N, F) single graphs (auto-batched) or
+(B, N, F) batches; arbitrary leading dims via vmap are supported by the
+Pallas batching rule.
 """
 
 from __future__ import annotations
@@ -14,24 +20,24 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import active_lowering as _lowering
 from repro.kernels.banked_mlp.kernel import banked_mlp_slotted_pallas
 from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _banked_mlp(params, x, slot_ranges):
+    mode = _lowering()
+    if mode == "ref":
+        return banked_mlp_slotted_ref(params, x, slot_ranges)
     if x.ndim == 2:
         return banked_mlp_slotted_pallas(
-            params, x[None], slot_ranges, tile_b=1, interpret=_use_interpret()
+            params, x[None], slot_ranges, tile_b=1, interpret=mode == "interpret"
         )[0]
     B = x.shape[0]
     tile = 128 if B % 128 == 0 else (B if B <= 128 else _largest_tile(B))
     return banked_mlp_slotted_pallas(
-        params, x, slot_ranges, tile_b=tile, interpret=_use_interpret()
+        params, x, slot_ranges, tile_b=tile, interpret=mode == "interpret"
     )
 
 
@@ -57,5 +63,8 @@ _banked_mlp.defvjp(_fwd, _bwd)
 
 def banked_mlp_slotted(params, x: jax.Array, slot_ranges: Sequence[Tuple[int, int, int]]):
     """Fused type-specific 2-layer MLP on the canonical slot layout."""
-    assert len(params["layers"]) == 2, "kernel fuses exactly two layers"
+    if len(params["layers"]) != 2:  # loud even under python -O (no silent fallback)
+        raise NotImplementedError(
+            f"Pallas banked-MLP kernel fuses exactly two layers, got {len(params['layers'])}"
+        )
     return _banked_mlp(params, x, tuple(slot_ranges))

@@ -24,20 +24,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(h_ref, a_ref, depth_ref, mask_ref, d_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref, *, slot_ranges):
+def _kernel(h_ref, a_ref, depth_ref, mask_ref, d_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref, *, slot_ranges, row_span, parent_rows):
     h = h_ref[...]  # (TB, N, H)
-    a = a_ref[...]  # (TB, N, N)
-    # 1. parent aggregation: msg[b, v] = sum_u a[b, u, v] * h[b, u]
+    s, e = row_span  # static rows eligible for this depth step
+    p = parent_rows  # static bound: a_flow[u, v] == 0 for u >= p, v in [s, e)
+    # 1. parent aggregation, only for eligible rows against possible parents:
+    #    msg[b, v] = sum_{u < p} a[b, u, v] * h[b, u]  for v in [s, e)
+    a = a_ref[:, :p, s:e]  # (TB, p, e-s) static slice
     msg = jax.lax.dot_general(
-        a, h, (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
-    )  # contract over u -> (TB, N, H)
+        a, h[:, :p], (((1,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # contract over u -> (TB, e-s, H)
     # 2. concat
-    z = jnp.concatenate([h, msg], axis=-1)  # (TB, N, 2H)
-    # 3. banked MLP over static slot ranges
-    upd = jnp.zeros_like(h)
+    z = jnp.concatenate([h[:, s:e, :], msg], axis=-1)  # (TB, e-s, 2H)
+    # 3. banked MLP over static slot ranges (absolute rows inside [s, e))
     outs = []
     for t, start, stop in slot_ranges:
-        zs = z[:, start:stop, :]
+        zs = z[:, start - s : stop - s, :]
         hid = jnp.maximum(
             jax.lax.dot_general(
                 zs, w1_ref[t], (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -52,10 +54,11 @@ def _kernel(h_ref, a_ref, depth_ref, mask_ref, d_ref, w1_ref, b1_ref, w2_ref, b2
             + b2_ref[t]
         )
     upd = jnp.concatenate(outs, axis=1)
-    # 4. depth select
+    # 4. depth select inside the span; rows outside pass through untouched
     d = d_ref[0]
-    sel = (depth_ref[...] == d) & (mask_ref[...] > 0)
-    out_ref[...] = jnp.where(sel[..., None], upd, h).astype(out_ref.dtype)
+    sel = (depth_ref[:, s:e] == d) & (mask_ref[:, s:e] > 0)
+    out_ref[...] = h.astype(out_ref.dtype)
+    out_ref[:, s:e, :] = jnp.where(sel[..., None], upd, h[:, s:e]).astype(out_ref.dtype)
 
 
 def mp_update_pallas(
@@ -68,15 +71,41 @@ def mp_update_pallas(
     slot_ranges: Sequence[Tuple[int, int, int]],
     tile_b: int = 128,
     interpret: bool = True,
+    row_span: Tuple[int, int] = None,
+    parent_rows: int = None,
 ) -> jax.Array:
+    """``row_span=(s, e)`` statically restricts the update to rows [s, e):
+    aggregation, MLP, and select all run at span width and rows outside pass
+    through — the query-specialized placed path sorts slots by depth so each
+    depth level is one contiguous span, skipping the provably-unselected rows'
+    dense work.  ``None`` means the full row axis (the generic scan path,
+    where the updated depth is dynamic).  ``parent_rows=p`` additionally
+    promises ``a_flow[u, v] == 0`` for ``u >= p, v`` in the span (depth-major
+    layouts: parents precede the level), shrinking the aggregation GEMM's
+    contraction axis."""
     l1, l2 = params["layers"]
     w1, b1, w2, b2 = l1["w"], l1["b"], l2["w"], l2["b"]
     B, N, H = h.shape
     tb = min(tile_b, B)
     assert B % tb == 0
+    span = (0, N) if row_span is None else (int(row_span[0]), int(row_span[1]))
+    assert 0 <= span[0] < span[1] <= N, (span, N)
+    # the per-range outputs are concatenated back over the span, so the ranges
+    # must tile [s, e) exactly, in order
+    edge = span[0]
+    for t, start, stop in slot_ranges:
+        assert start == edge and start < stop <= span[1], (
+            f"slot ranges must tile row span {span} contiguously, got {slot_ranges}"
+        )
+        edge = stop
+    assert edge == span[1], (slot_ranges, span)
+    p = N if parent_rows is None else int(parent_rows)
+    assert 0 < p <= N, (p, N)
     d_arr = jnp.asarray(d, jnp.int32).reshape((1,))
     return pl.pallas_call(
-        functools.partial(_kernel, slot_ranges=tuple(slot_ranges)),
+        functools.partial(
+            _kernel, slot_ranges=tuple(slot_ranges), row_span=span, parent_rows=p
+        ),
         grid=(B // tb,),
         in_specs=[
             pl.BlockSpec((tb, N, H), lambda i: (i, 0, 0)),

@@ -1,4 +1,9 @@
-"""jit'd wrapper for the fused MP depth-step kernel (custom_vjp via oracle)."""
+"""jit'd wrapper for the fused MP depth-step kernel (custom_vjp via oracle).
+
+Per-backend lowering as in ``kernels/banked_mlp/ops.py``: Pallas kernel on
+TPU, jnp oracle off-TPU (``REPRO_PALLAS_INTERPRET=1`` forces the interpreter
+for parity testing), oracle VJP for the backward everywhere.
+"""
 
 from __future__ import annotations
 
@@ -8,12 +13,9 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import active_lowering as _lowering
 from repro.kernels.mp_update.kernel import mp_update_pallas
 from repro.kernels.mp_update.ref import mp_update_ref
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _largest_tile(b: int, cap: int = 128) -> int:
@@ -23,11 +25,27 @@ def _largest_tile(b: int, cap: int = 128) -> int:
     return 1
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(6,))
-def _mp_update(params, h, a_flow, depth, mask, d, slot_ranges):
+@partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _mp_update(params, h, a_flow, depth, mask, d, slot_ranges, row_span, parent_rows):
+    mode = _lowering()
+    if mode == "ref":
+        # the oracle broadcasts shared (N,N)/(N,) fields itself — keeping
+        # a_flow unbatched here lets XLA lower the aggregation as one GEMM
+        # instead of a per-candidate batched matmul
+        return mp_update_ref(
+            params, h, a_flow, depth, mask, d, slot_ranges, row_span, parent_rows
+        )
     squeeze = h.ndim == 2
     if squeeze:
         h, a_flow, depth, mask = h[None], a_flow[None], depth[None], mask[None]
+    elif h.ndim == 3:  # the Pallas kernel needs every operand batched
+        b = h.shape[0]
+        if a_flow.ndim == 2:
+            a_flow = jnp.broadcast_to(a_flow, (b,) + a_flow.shape)
+        if depth.ndim == 1:
+            depth = jnp.broadcast_to(depth, (b,) + depth.shape)
+        if mask.ndim == 1:
+            mask = jnp.broadcast_to(mask, (b,) + mask.shape)
     out = mp_update_pallas(
         params,
         h,
@@ -37,13 +55,17 @@ def _mp_update(params, h, a_flow, depth, mask, d, slot_ranges):
         d,
         slot_ranges,
         tile_b=_largest_tile(h.shape[0]),
-        interpret=_use_interpret(),
+        interpret=mode == "interpret",
+        row_span=row_span,
+        parent_rows=parent_rows,
     )
     return out[0] if squeeze else out
 
 
-def _fwd(params, h, a_flow, depth, mask, d, slot_ranges):
-    return _mp_update(params, h, a_flow, depth, mask, d, slot_ranges), (
+def _fwd(params, h, a_flow, depth, mask, d, slot_ranges, row_span, parent_rows):
+    return _mp_update(
+        params, h, a_flow, depth, mask, d, slot_ranges, row_span, parent_rows
+    ), (
         params,
         h,
         a_flow,
@@ -53,10 +75,12 @@ def _fwd(params, h, a_flow, depth, mask, d, slot_ranges):
     )
 
 
-def _bwd(slot_ranges, res, g):
+def _bwd(slot_ranges, row_span, parent_rows, res, g):
     params, h, a_flow, depth, mask, d = res
     _, vjp = jax.vjp(
-        lambda p, hh, aa: mp_update_ref(p, hh, aa, depth, mask, d, slot_ranges),
+        lambda p, hh, aa: mp_update_ref(
+            p, hh, aa, depth, mask, d, slot_ranges, row_span, parent_rows
+        ),
         params,
         h,
         a_flow,
@@ -68,7 +92,38 @@ def _bwd(slot_ranges, res, g):
 _mp_update.defvjp(_fwd, _bwd)
 
 
-def mp_update(params, h, a_flow, depth, mask, d, slot_ranges: Sequence[Tuple[int, int, int]]):
-    """Fused stage-3 depth step: aggregate -> concat -> banked MLP -> select."""
-    assert len(params["layers"]) == 2
-    return _mp_update(params, h, a_flow, depth, mask, d, tuple(slot_ranges))
+def mp_update(
+    params,
+    h,
+    a_flow,
+    depth,
+    mask,
+    d,
+    slot_ranges: Sequence[Tuple[int, int, int]],
+    row_span: Tuple[int, int] = None,
+    parent_rows: int = None,
+):
+    """Fused stage-3 depth step: aggregate -> concat -> banked MLP -> select.
+
+    ``a_flow``/``depth``/``mask`` may be unbatched ``(N, N)`` / ``(N,)`` while
+    ``h`` is batched ``(B, N, H)`` — the placement-specialized forward shares
+    one graph skeleton across all candidates.  The Pallas/interpret lowerings
+    broadcast the shared fields to the batch (inside the custom_vjp primal, so
+    gradients transpose back correctly); the jnp-oracle lowering keeps them
+    unbatched and lets XLA lower the aggregation as one GEMM.
+
+    ``row_span=(s, e)`` statically restricts aggregation/update/select to
+    rows [s, e) (``slot_ranges`` must tile the span); rows outside pass
+    through untouched.  The placed path sorts slots by depth so each depth
+    level is one such span — the dense work of provably-unselected rows
+    vanishes while the step stays a single fused launch.  ``parent_rows=p``
+    additionally bounds the aggregation's contraction to rows [0, p) (valid
+    when ``a_flow[u >= p, span] == 0``, as in the depth-major layout).
+    """
+    if len(params["layers"]) != 2:  # loud even under python -O (no silent fallback)
+        raise NotImplementedError(
+            f"Pallas mp-update kernel fuses exactly two layers, got {len(params['layers'])}"
+        )
+    span = None if row_span is None else (int(row_span[0]), int(row_span[1]))
+    p = None if parent_rows is None else int(parent_rows)
+    return _mp_update(params, h, a_flow, depth, mask, d, tuple(slot_ranges), span, p)

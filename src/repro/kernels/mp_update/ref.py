@@ -18,9 +18,28 @@ def mp_update_ref(
     mask: jax.Array,  # (..., N) float {0,1}
     d: jax.Array,  # scalar int32: the depth level being updated
     slot_ranges: Sequence[Tuple[int, int, int]],
+    row_span=None,  # static (s, e): restrict the update to rows [s, e)
+    parent_rows=None,  # static p: a_flow[u, v] == 0 for u >= p, v in the span
 ) -> jax.Array:
-    """One SOURCES->OPS depth step: aggregate parents, update, select."""
-    msg = jnp.swapaxes(a_flow, -1, -2) @ h  # msg[v] = sum_{u: u->v} h[u]
-    upd = banked_mlp_slotted_ref(params, jnp.concatenate([h, msg], axis=-1), slot_ranges)
-    sel = ((depth == d) & (mask > 0))[..., None]
-    return jnp.where(sel, upd, h)
+    """One SOURCES->OPS depth step: aggregate parents, update, select.
+
+    With ``row_span=(s, e)`` only rows [s, e) are aggregated/updated (the
+    ``slot_ranges`` are absolute row indices inside the span); rows outside
+    pass through — mirrors the kernel's static-span fast path.
+    ``parent_rows`` bounds the aggregation's contraction like the kernel's.
+    """
+    if row_span is None:
+        msg = jnp.swapaxes(a_flow, -1, -2) @ h  # msg[v] = sum_{u: u->v} h[u]
+        upd = banked_mlp_slotted_ref(params, jnp.concatenate([h, msg], axis=-1), slot_ranges)
+        sel = ((depth == d) & (mask > 0))[..., None]
+        return jnp.where(sel, upd, h)
+    s, e = row_span
+    p = a_flow.shape[-2] if parent_rows is None else parent_rows
+    msg = jnp.swapaxes(a_flow[..., :p, s:e], -1, -2) @ h[..., :p, :]  # (..., e-s, H)
+    z = jnp.concatenate([h[..., s:e, :], msg], axis=-1)
+    shifted = tuple((t, start - s, stop - s) for t, start, stop in slot_ranges)
+    upd = banked_mlp_slotted_ref(params, z, shifted)
+    sel = ((depth[..., s:e] == d) & (mask[..., s:e] > 0))[..., None]
+    return jnp.concatenate(
+        [h[..., :s, :], jnp.where(sel, upd, h[..., s:e, :]), h[..., e:, :]], axis=-2
+    )

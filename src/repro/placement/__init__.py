@@ -3,7 +3,6 @@
 from repro.placement.enumerate import (
     batch_validity_mask,
     dedup_assignments,
-    enumerate_candidates,
     heuristic_placement,
     mutate_assignments,
     sample_assignment_matrix,

@@ -7,9 +7,10 @@ Candidates respect three IoT-scenario rules:
 
 The sampler is fully vectorized: it draws an ``(N, n_ops)`` assignment matrix
 in one topological sweep (NumPy ops across the whole candidate axis) and
-validates all rows with batched checks.  ``enumerate_candidates`` keeps the
-original per-``Placement`` API on top of this path; the optimizer consumes
-the raw matrix directly via ``sample_assignment_matrix``.
+validates all rows with batched checks.  All consumers — the optimizer, the
+flat-vector ranker, the Exp-2 benchmarks — operate on the raw matrix via
+``sample_assignment_matrix``; convert a row with ``Placement.of(row)`` only
+at the simulator/reporting boundary.
 """
 
 from __future__ import annotations
@@ -213,13 +214,3 @@ def mutate_assignments(
     return dedup_assignments(children)
 
 
-def enumerate_candidates(
-    query: Query,
-    cluster: Cluster,
-    k: int,
-    rng: np.random.Generator,
-    max_tries_factor: int = 30,
-) -> List[Placement]:
-    """Sample up to ``k`` distinct rule-respecting placement candidates."""
-    matrix = sample_assignment_matrix(query, cluster, k, rng, max_tries_factor)
-    return [Placement.of(row) for row in matrix]

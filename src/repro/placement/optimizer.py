@@ -21,6 +21,7 @@ Vectorized single-materialization search pipeline:
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -38,12 +39,15 @@ from repro.core.graph import (
     build_graph_skeleton,
     pad_batch,
     query_static,
+    skeleton_cache_key,
 )
 from repro.core.model import (
     CostModelConfig,
     predict,
     predict_metrics,
     predict_placements,
+    predict_placements_fused,
+    stack_metric_models,
 )
 from repro.dsps.hardware import Cluster
 from repro.dsps.placement import Placement
@@ -72,10 +76,47 @@ class PlacementOptimizer:
     metric plus (when available) "success" and "backpressure" for the sanity
     filter; missing filters degrade gracefully (paper's procedure needs them,
     our ablations can disable them).
+
+    Per-(query, cluster) state — the featurized skeleton, its device
+    transfer, and the trace-time ``QueryStatic`` — is cached across
+    ``optimize``/``score_assignments`` calls (keyed structurally via
+    ``skeleton_cache_key``, LRU-bounded by ``skeleton_cache_size``): the
+    online-monitoring pattern re-scores the same query every round, and
+    rebuilding the skeleton per call was pure waste.  The per-metric
+    ensembles are fused into one stacked forward per scoring call when their
+    configs are shape-identical (``stack_metric_models``); heterogeneous
+    configs fall back to the per-metric loop.
     """
+
+    skeleton_cache_size = 64  # (query, cluster) pairs kept device-resident
 
     def __init__(self, models: Dict[str, Tuple[object, CostModelConfig]]):
         self.models = models
+        self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, object]]" = OrderedDict()
+        self._stacked: Dict[Tuple[str, ...], object] = {}
+
+    def _skeleton_for(self, query: Query, cluster: Cluster):
+        """Cached (device-resident skeleton, QueryStatic) for one pair."""
+        key = skeleton_cache_key(query, cluster)
+        hit = self._skeletons.get(key)
+        if hit is not None:
+            self._skeletons.move_to_end(key)
+            return hit
+        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(query, cluster))
+        entry = (skel, query_static(query))
+        self._skeletons[key] = entry
+        while len(self._skeletons) > self.skeleton_cache_size:
+            self._skeletons.popitem(last=False)
+        return entry
+
+    def _stacked_for(self, metrics: Tuple[str, ...]):
+        """Fused ensemble stack for ``metrics``, or None if not fusable."""
+        if metrics not in self._stacked:
+            try:
+                self._stacked[metrics] = stack_metric_models(self.models, metrics)
+            except ValueError:  # heterogeneous per-metric configs
+                self._stacked[metrics] = None
+        return self._stacked[metrics]
 
     def score_candidates(
         self, query: Query, cluster: Cluster, candidates: List[Placement], metric: str
@@ -114,10 +155,12 @@ class PlacementOptimizer:
     def _make_scorer(self, query: Query, cluster: Cluster, metrics: Sequence[str]):
         """Scoring closure with the per-(query, cluster) work hoisted out.
 
-        The refinement loop re-scores new candidates every round; the
-        skeleton, its device transfer, and the trace-time ``QueryStatic`` are
-        identical across rounds, so they are computed once here.
+        The refinement loop re-scores new candidates every round, and repeated
+        ``optimize`` calls re-score the same query; the skeleton, its device
+        transfer, and the trace-time ``QueryStatic`` are identical throughout,
+        so they come from the instance-level cache (``_skeleton_for``).
         """
+        metrics = tuple(metrics)
         if any(self.models[m][1].traditional_mp for m in metrics):
             # ablation models lack the 3-stage structure the specialized
             # forward exploits; build the full broadcast batch instead
@@ -132,8 +175,8 @@ class PlacementOptimizer:
 
             return score_generic
 
-        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(query, cluster))
-        static = query_static(query)
+        skel, static = self._skeleton_for(query, cluster)
+        stacked = self._stacked_for(metrics)
 
         def score(assignments: np.ndarray) -> Dict[str, np.ndarray]:
             n = len(assignments)
@@ -143,6 +186,9 @@ class PlacementOptimizer:
             if pad:
                 a_place = np.concatenate([a_place, np.repeat(a_place[-1:], pad, axis=0)])
             a_place = jnp.asarray(a_place)
+            if stacked is not None:
+                scored = predict_placements_fused(stacked, skel, a_place, static)
+                return {m: v[:n] for m, v in scored.items()}
             return {
                 m: predict_placements(
                     self.models[m][0], skel, a_place, static, self.models[m][1]

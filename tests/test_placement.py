@@ -7,8 +7,21 @@ import pytest
 from _propcheck import given, settings, strategies as st
 
 from repro.core import CostModelConfig, GNNConfig, init_cost_model
-from repro.core.graph import batch_graphs, build_graph
-from repro.core.model import predict
+from repro.core.graph import (
+    batch_graphs,
+    build_a_place_batch,
+    build_graph,
+    build_graph_skeleton,
+    query_static,
+    skeleton_cache_key,
+)
+from repro.core.model import (
+    predict,
+    predict_metrics,
+    predict_placements,
+    predict_placements_fused,
+    stack_metric_models,
+)
 from repro.dsps import WorkloadGenerator, simulate
 from repro.dsps.placement import (
     Placement,
@@ -19,7 +32,6 @@ from repro.dsps.simulator import SimulatorConfig
 from repro.placement import (
     PlacementOptimizer,
     batch_validity_mask,
-    enumerate_candidates,
     heuristic_placement,
     mutate_assignments,
     online_monitoring_run,
@@ -38,7 +50,8 @@ def test_enumeration_respects_rules(seed):
     q = gen.query(name="e")
     c = gen.cluster(6)
     rng = np.random.default_rng(seed)
-    for p in enumerate_candidates(q, c, 8, rng):
+    for row in sample_assignment_matrix(q, c, 8, rng):
+        p = Placement.of(row)
         assert respects_increasing_capability(q, c, p)
         assert is_acyclic_placement(q, p)
         p.validate(q, c)
@@ -160,6 +173,170 @@ def test_padding_bucket_invariance():
     # power-of-two count: pad_batch is the identity, same scores still
     four = opt.score_assignments(q, c, a[:4], ["latency_p"])["latency_p"]
     np.testing.assert_allclose(together[:4], four, rtol=1e-5, atol=1e-6)
+
+
+# -- kernel routing + fused ensembles + skeleton cache -------------------------
+
+
+def _placed_inputs(seed=7, n=11, kind="two_way"):
+    q = GEN.query(kind=kind, name=f"pk{seed}")
+    c = GEN.cluster(6)
+    a = sample_assignment_matrix(q, c, n, np.random.default_rng(seed))
+    skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(q, c))
+    static = query_static(q)
+    a_place = jnp.asarray(build_a_place_batch(q, c, a))
+    return q, c, a, skel, static, a_place
+
+
+@pytest.mark.parametrize("lowering", ["ref", "interpret"])
+def test_placed_path_pallas_matches_jnp(lowering, monkeypatch):
+    """apply_gnn_placed with use_pallas=True must be numerically equivalent to
+    the jnp banked-MLP path under BOTH off-TPU lowerings of the kernel ops:
+    the compiled jnp-oracle lowering (default) and the forced Pallas
+    interpreter, which executes the actual kernel bodies."""
+    from repro.core.gnn import apply_gnn_placed, init_gnn
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1" if lowering == "interpret" else "0")
+    _, _, _, skel, static, a_place = _placed_inputs()
+    cfg_j = GNNConfig(hidden=16)
+    cfg_p = GNNConfig(hidden=16, use_pallas=True)
+    params = init_gnn(jax.random.PRNGKey(3), cfg_j)
+    out_j = apply_gnn_placed(params, skel, a_place, static, cfg_j)
+    out_p = apply_gnn_placed(params, skel, a_place, static, cfg_p)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("lowering", ["ref", "interpret"])
+def test_stacked_path_pallas_matches_jnp(lowering, monkeypatch):
+    """The stacked trimmed forward under use_pallas — including the banded
+    per-level row_span mp_update calls — matches its jnp twin under both
+    off-TPU lowerings (the interpret case executes the kernel bodies)."""
+    from repro.core.gnn import apply_gnn_placed_stacked
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1" if lowering == "interpret" else "0")
+    _, _, _, skel, static, a_place = _placed_inputs(seed=12)
+    models = _tiny_models()
+    stacked = stack_metric_models(models)
+    n_hw = int(np.asarray(skel.hw_mask).sum())
+    gnn_j = models["latency_p"][1].gnn
+    gnn_p = GNNConfig(hidden=gnn_j.hidden, use_pallas=True)
+    out_j = apply_gnn_placed_stacked(stacked.params, skel, a_place, static, gnn_j, n_hw)
+    out_p = apply_gnn_placed_stacked(stacked.params, skel, a_place, static, gnn_p, n_hw)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p), atol=1e-4, rtol=1e-4)
+
+
+def test_predict_placements_pallas_parity():
+    """The full predict path (jit + ensemble vmap + vote) agrees between the
+    Pallas-routed and jnp scorers on every metric type."""
+    _, _, _, skel, static, a_place = _placed_inputs(seed=8)
+    for metric in ("latency_p", "success"):
+        cfg_j = CostModelConfig(metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=16))
+        cfg_p = CostModelConfig(
+            metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=16, use_pallas=True)
+        )
+        params = init_cost_model(jax.random.PRNGKey(0), cfg_j)
+        ref = predict_placements(params, skel, a_place, static, cfg_j)
+        got = predict_placements(params, skel, a_place, static, cfg_p)
+        if metric == "success":  # classification: votes must match exactly
+            np.testing.assert_array_equal(got, ref, err_msg=metric)
+        else:
+            np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4, err_msg=metric)
+
+
+def test_stacked_ensembles_match_per_metric_loop():
+    """One fused stacked forward == the per-(metric, member) loop, to float
+    tolerance, for both the placed path and the generic predict_metrics path."""
+    q, c, a, skel, static, a_place = _placed_inputs(seed=9)
+    models = _tiny_models()
+    stacked = stack_metric_models(models)
+    assert stacked.sizes == (2, 2, 2)
+    fused = predict_placements_fused(stacked, skel, a_place, static)
+    for metric, (params, cfg) in models.items():
+        ref = predict_placements(params, skel, a_place, static, cfg)
+        np.testing.assert_allclose(fused[metric], ref, rtol=1e-5, atol=1e-6, err_msg=metric)
+    # generic path: predict_metrics (fused internally) vs per-metric predict
+    g = jax.tree_util.tree_map(
+        jnp.asarray, batch_graphs([build_graph(q, c, Placement.of(r)) for r in a])
+    )
+    scored = predict_metrics(models, g)
+    for metric, (params, cfg) in models.items():
+        np.testing.assert_allclose(
+            scored[metric], predict(params, g, cfg), rtol=1e-5, atol=1e-6, err_msg=metric
+        )
+
+
+def test_stack_metric_models_rejects_mixed_configs():
+    models = _tiny_models()
+    cfg = CostModelConfig(metric="latency_e", n_ensemble=2, gnn=GNNConfig(hidden=8))
+    models["latency_e"] = (init_cost_model(jax.random.PRNGKey(5), cfg), cfg)
+    with pytest.raises(ValueError):
+        stack_metric_models(models)
+    # the optimizer must still score correctly through the per-metric fallback
+    opt = PlacementOptimizer(models)
+    q = GEN.query(name="mix")
+    c = GEN.cluster(6)
+    a = sample_assignment_matrix(q, c, 6, np.random.default_rng(3))
+    got = opt.score_assignments(q, c, a, ["latency_p", "latency_e"])
+    for metric in ("latency_p", "latency_e"):
+        params, cfg = opt.models[metric]
+        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(q, c))
+        ref = predict_placements(
+            params, skel, jnp.asarray(build_a_place_batch(q, c, a)), query_static(q), cfg
+        )[: len(a)]
+        np.testing.assert_allclose(got[metric], ref, rtol=1e-5, atol=1e-6, err_msg=metric)
+
+
+def test_use_pallas_raises_loudly_on_unfusable_config():
+    """use_pallas must never silently fall back to jnp: a config the kernels
+    cannot fuse (!= 2 layers) raises instead."""
+    from repro.core.gnn import apply_gnn_placed, init_gnn
+
+    _, _, _, skel, static, a_place = _placed_inputs(seed=10)
+    cfg = GNNConfig(hidden=16, update_layers=3, use_pallas=True)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(NotImplementedError, match="use_pallas"):
+        apply_gnn_placed(params, skel, a_place, static, cfg)
+
+
+def test_skeleton_cached_across_optimize_calls(monkeypatch):
+    """The second optimize() on the same (query, cluster) must perform ZERO
+    build_graph_skeleton rebuilds (the online-monitoring amortization)."""
+    import repro.placement.optimizer as optimizer_mod
+
+    calls = {"n": 0}
+    orig = optimizer_mod.build_graph_skeleton
+
+    def counted(*args, **kw):
+        calls["n"] += 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(optimizer_mod, "build_graph_skeleton", counted)
+    opt = PlacementOptimizer(_tiny_models())
+    q = GEN.query(kind="linear", name="cache")
+    c = GEN.cluster(6)
+    opt.optimize(q, c, "latency_p", k=8, rng=np.random.default_rng(0))
+    first = calls["n"]
+    assert first == 1
+    r1 = opt.optimize(q, c, "latency_p", k=8, rng=np.random.default_rng(1))
+    assert calls["n"] == first  # cache hit: zero rebuilds
+    # a *different* query must miss the cache, not reuse a stale skeleton
+    q2 = GEN.query(kind="two_way", name="cache2")
+    assert skeleton_cache_key(q2, c) != skeleton_cache_key(q, c)
+    opt.optimize(q2, c, "latency_p", k=8, rng=np.random.default_rng(2))
+    assert calls["n"] == first + 1
+    r1.placement.validate(q, c)
+
+
+def test_skeleton_cache_key_structural():
+    """Equal-structure (query, cluster) pairs share a key even when they are
+    distinct objects; differing clusters do not."""
+    gen_a = WorkloadGenerator(seed=55)
+    gen_b = WorkloadGenerator(seed=55)
+    qa, qb = gen_a.query(name="a"), gen_b.query(name="b")
+    ca, cb = gen_a.cluster(5), gen_b.cluster(5)
+    assert qa is not qb and ca is not cb
+    assert skeleton_cache_key(qa, ca) == skeleton_cache_key(qb, cb)
+    assert skeleton_cache_key(qa, ca) != skeleton_cache_key(qa, gen_a.cluster(5))
 
 
 class _OracleOptimizer(PlacementOptimizer):

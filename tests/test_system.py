@@ -50,11 +50,17 @@ def test_trained_beats_untrained(trained):
 
 
 def test_costream_placement_beats_heuristic(trained):
+    """De-flaked (ROADMAP): with a weakly-trained ensemble, individual queries
+    can land within simulator noise of the heuristic, and the old strict
+    ``got <= base`` win could tip on float-level prediction changes (e.g. a
+    different score-tie argmin after reduction-order changes).  A win now
+    tolerates an explicit 2% margin — near-ties are not losses — and the
+    aggregate (median latency ratio) must still not regress the heuristic."""
     models, _ = trained
     opt = PlacementOptimizer(models)
     gen = WorkloadGenerator(seed=88)
     rng = np.random.default_rng(0)
-    wins, total = 0, 0
+    ratios = []
     for i in range(12):
         q = gen.query(kind="linear", name=f"pl{i}")
         c = gen.cluster(6)
@@ -62,6 +68,8 @@ def test_costream_placement_beats_heuristic(trained):
         base_lat = simulate(q, c, base).latency_p
         res = opt.optimize(q, c, "latency_p", k=24, rng=rng)
         got_lat = simulate(q, c, res.placement).latency_p
-        wins += got_lat <= base_lat
-        total += 1
-    assert wins / total >= 0.6, f"won {wins}/{total}"
+        ratios.append(got_lat / max(base_lat, 1e-9))
+    ratios = np.asarray(ratios)
+    wins = int((ratios <= 1.02).sum())
+    assert wins / len(ratios) >= 0.6, f"won {wins}/{len(ratios)}: {np.round(ratios, 3)}"
+    assert float(np.median(ratios)) <= 1.0, f"median ratio {np.median(ratios):.3f}"
