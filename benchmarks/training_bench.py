@@ -1,0 +1,203 @@
+"""Training-step microbenchmark: steps/s and examples/s, seed vs unified.
+
+Compares two implementations of one jitted training step (forward + backward
++ adam update) for a COSTREAM ensemble on identical data and weights:
+
+  seed path     the pre-engine forward, replicated verbatim below: one
+                per-member vmap of a per-graph vmap of a single-graph
+                forward whose stage-3 sweep always scans all MAX_DEPTH
+                levels at full row width;
+  unified path  ``ensemble_loss`` on the unified engine
+                (docs/forward_engine.md): banked MLPs run once across the
+                whole padded batch, members ride one stacked forward, and
+                the stage-3 sweep runs only the bucket's non-empty depth
+                levels at their static ``row_span``/``parent_rows`` bands
+                (``bucket_dataset``'s depth-major batches).
+
+Both steps are timed at the steady state (first call — the trace — excluded)
+on the same (n_ops, depth)-bucketed batches, so the ratio isolates the
+engine restructure.  Untrained weights are fine: step time does not depend
+on the weights' values.
+
+    PYTHONPATH=src python benchmarks/training_bench.py [--quick]
+        [--min-speedup X]                      # unified vs seed steps/s floor
+        [--baseline FILE --max-regression F]   # ratio gate vs recorded run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.core import CostModelConfig, GNNConfig, init_cost_model
+from repro.core.graph import SLOT_RANGES
+from repro.core.model import ensemble_loss, loss_fn
+from repro.dsps import WorkloadGenerator
+from repro.training import bucket_dataset, bucketed_batches, dataset_from_traces
+from repro.training import optim
+
+
+def _seed_apply_gnn(p, g, cfg: GNNConfig):
+    """The seed-era single-graph forward (pre-unified-engine), kept verbatim
+    as the benchmark baseline: full-width banked MLPs + a lax.scan over all
+    ``max_depth`` levels regardless of the query's true depth."""
+    op_mask = g.op_mask[:, None]
+    hw_mask = g.hw_mask[:, None]
+    h_ops = nn.apply_mlp_bank_slotted(p["op_enc"], g.op_x, SLOT_RANGES) * op_mask
+    h_hw = nn.apply_mlp(p["hw_enc"], g.hw_x) * hw_mask
+    msg_hw = g.a_place.T @ h_ops
+    h_hw = nn.apply_mlp(p["hw_upd"], jnp.concatenate([h_hw, msg_hw], axis=-1)) * hw_mask
+    msg_ops = g.a_place @ h_hw
+    h_ops = (
+        nn.apply_mlp_bank_slotted(
+            p["op_upd"], jnp.concatenate([h_ops, msg_ops], axis=-1), SLOT_RANGES
+        )
+        * op_mask
+    )
+
+    def depth_step(h, d):
+        msg = g.a_flow.T @ h
+        upd = nn.apply_mlp_bank_slotted(
+            p["op_upd"], jnp.concatenate([h, msg], axis=-1), SLOT_RANGES
+        )
+        sel = ((g.op_depth == d) & (g.op_mask > 0))[:, None]
+        return jnp.where(sel, upd, h), None
+
+    h_ops, _ = jax.lax.scan(
+        depth_step, h_ops, jnp.arange(1, cfg.max_depth + 1, dtype=g.op_depth.dtype)
+    )
+    pooled = jnp.sum(h_ops * op_mask, axis=0) + jnp.sum(h_hw * hw_mask, axis=0)
+    return nn.apply_mlp(p["out"], pooled)
+
+
+def _make_steps(cfg: CostModelConfig, train_lr=1e-3):
+    opt = optim.adam(lr=optim.constant_schedule(train_lr))
+
+    def seed_loss(p, g, y):
+        raw = jax.vmap(
+            lambda pp: jax.vmap(lambda gg: _seed_apply_gnn(pp, gg, cfg.gnn))(g)[..., 0]
+        )(p)
+        return jnp.sum(jax.vmap(lambda r: loss_fn(cfg)(r, y))(raw))
+
+    @jax.jit
+    def seed_step(params, opt_state, g, y):
+        loss_val, grads = jax.value_and_grad(lambda p: seed_loss(p, g, y))(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss_val
+
+    @partial(jax.jit, static_argnums=(4,))
+    def unified_step(params, opt_state, g, y, banding):
+        loss_val, grads = jax.value_and_grad(
+            lambda p: ensemble_loss(p, g, y, cfg, banding)
+        )(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss_val
+
+    return opt, seed_step, unified_step
+
+
+def run(n_traces: int, batch_size: int, repeats: int, seed: int = 0) -> dict:
+    traces = WorkloadGenerator(seed=seed).corpus(n_traces)
+    ds = dataset_from_traces(traces, "latency_p")
+    ds, buckets = bucket_dataset(ds)
+    cfg = CostModelConfig(metric="latency_p", n_ensemble=3, gnn=GNNConfig())
+    params = init_cost_model(jax.random.PRNGKey(0), cfg)
+    opt, seed_step, unified_step = _make_steps(cfg)
+
+    batches = [
+        (jax.tree_util.tree_map(jnp.asarray, g), jnp.asarray(y), banding)
+        for g, y, banding in bucketed_batches(ds, buckets, batch_size)
+    ]
+    assert batches, "corpus produced no batches"
+
+    # sanity: identical loss on the first batch before trusting the timings
+    g0, y0, band0 = batches[0]
+    st = opt.init(params)
+    _, _, l_seed = seed_step(params, st, g0, y0)
+    _, _, l_uni = unified_step(params, st, g0, y0, band0)
+    np.testing.assert_allclose(float(l_seed), float(l_uni), rtol=1e-4)
+
+    def time_epochs(step, with_banding: bool):
+        # warmup epoch = compile every bucket's trace; then timed epochs
+        def epoch():
+            p, s = params, opt.init(params)
+            for g, y, banding in batches:
+                p, s, _ = step(p, s, g, y, banding) if with_banding else step(p, s, g, y)
+            jax.block_until_ready(p)
+
+        epoch()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            epoch()
+        return (time.perf_counter() - t0) / repeats
+
+    t_seed = time_epochs(seed_step, with_banding=False)
+    t_uni = time_epochs(unified_step, with_banding=True)
+    steps = len(batches)
+    examples = steps * batch_size
+    return {
+        "n_traces": n_traces,
+        "batch_size": batch_size,
+        "repeats": repeats,
+        "steps_per_epoch": steps,
+        "n_buckets": len(buckets),
+        "seed_steps_per_s": round(steps / t_seed, 2),
+        "unified_steps_per_s": round(steps / t_uni, 2),
+        "seed_examples_per_s": round(examples / t_seed, 1),
+        "unified_examples_per_s": round(examples / t_uni, 1),
+        "unified_vs_seed": round(t_seed / t_uni, 3),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--traces", type=int, default=2048)
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true", help="small run for per-PR CI")
+    ap.add_argument("--min-speedup", type=float, default=None, help="fail below this")
+    ap.add_argument(
+        "--baseline",
+        type=str,
+        default=None,
+        help="JSON with a recorded unified_vs_seed ratio",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.10,
+        help="allowed fractional drop of the measured ratio below the baseline",
+    )
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.traces, args.repeats = 768, 2
+
+    res = run(args.traces, args.batch_size, args.repeats)
+    print(json.dumps(res, indent=2))
+    # not assert: these are the CI gate's invariants, they must survive python -O
+    if args.min_speedup is not None and res["unified_vs_seed"] < args.min_speedup:
+        raise SystemExit(
+            f"unified training step {res['unified_vs_seed']}x below required "
+            f"{args.min_speedup}x over the seed path"
+        )
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        floor = base["unified_vs_seed"] * (1.0 - args.max_regression)
+        if res["unified_vs_seed"] < floor:
+            raise SystemExit(
+                f"unified_vs_seed ratio {res['unified_vs_seed']} regressed >"
+                f"{args.max_regression:.0%} below recorded baseline "
+                f"{base['unified_vs_seed']} (floor {floor:.3f})"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -15,3 +15,9 @@ echo "== placement scoring perf (quick) =="
 # scoring ratios must not regress >10% below the recorded baseline
 python benchmarks/placement_bench.py --quick --min-speedup 3 \
   --baseline benchmarks/baselines/placement_bench_quick.json --max-regression 0.10
+
+echo "== training step perf (quick) =="
+# the unified engine's training step must stay >= 1.5x the seed per-member
+# path at batch 256 and must not regress >10% below the recorded baseline
+python benchmarks/training_bench.py --quick --min-speedup 1.5 \
+  --baseline benchmarks/baselines/training_bench_quick.json --max-regression 0.10

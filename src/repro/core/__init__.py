@@ -15,8 +15,10 @@ from repro.core.features import (
 from repro.core.graph import (
     MAX_OPS,
     MAX_HW,
+    BatchBanding,
     JointGraph,
     QueryStatic,
+    batch_banding,
     bucket_size,
     build_a_place_batch,
     build_graph,
@@ -34,6 +36,7 @@ from repro.core.gnn import (
     apply_gnn,
     apply_gnn_batch,
     apply_gnn_placed,
+    apply_gnn_stacked,
     apply_gnn_traditional,
 )
 from repro.core.model import (

@@ -1,0 +1,52 @@
+"""Shared padding / shape-bucket policy for jitted graph batches.
+
+Training and placement scoring both feed ragged work (trace corpora,
+candidate sets) through jitted forwards, and jitted forwards retrace per
+input shape.  This module is the single place that decides how a ragged
+count becomes a static shape:
+
+* ``bucket_size``     — the enclosing power-of-two candidate-count bucket the
+                        placement scorer pads to;
+* ``pad_batch``       — pad a batched ``JointGraph``-like NamedTuple along
+                        axis 0 by repeating the last row, so every padded row
+                        stays a well-formed graph (masks and slot types
+                        intact) and bucketed jit shapes never see garbage.
+
+The training iterator (``training/batching.bucketed_batches``) applies the
+same duplicate-samples-never-foreign-shapes policy at the index level: epoch
+tails are padded by wrapping the banding group's own shuffled order.
+Callers always slice predictions back to the true count; padded rows are
+scored/trained but meaningless (placement) or benign duplicates (training).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def bucket_size(n: int) -> int:
+    """Smallest power of two >= n: the jit shape buckets the scorer pads to."""
+    assert n > 0, n
+    return 1 << (n - 1).bit_length()
+
+
+def pad_batch(g, target: int):
+    """Pad a batched graph NamedTuple along axis 0 to ``target`` rows.
+
+    Padding repeats the last graph, so every row stays a well-formed graph
+    (masks and slot types intact) and bucketed jit shapes never see garbage;
+    callers slice predictions back to the true count.  Works on any NamedTuple
+    of batched arrays (``JointGraph`` in practice).
+    """
+    fields = [np.asarray(x) for x in g]
+    n = fields[0].shape[0]
+    assert all(x.shape[0] == n for x in fields), "fields disagree on batch size"
+    assert n <= target, (n, target)
+    if n == target:
+        return g
+    return type(g)(
+        *[
+            np.pad(x, [(0, target - n)] + [(0, 0)] * (x.ndim - 1), mode="edge")
+            for x in fields
+        ]
+    )

@@ -6,11 +6,28 @@ Implements Algorithm 1 of the paper on the padded dense ``JointGraph``:
   stage 1  OPS->HW   : hosts absorb the states of the operators placed on them
   stage 2  HW->OPS   : operators absorb the (updated) state of their host
   stage 3  SOURCES->OPS: states flow along the logical data flow in topological
-                        order (a lax.scan over depth levels with masked updates)
+                        order (depth-level steps with masked updates)
   readout  sum over all node states -> MLP_out -> prediction
 
 Following the paper's text, every update is
 ``h'_v = MLP'_{T(v)}(concat(h_v, sum_{u in children(v)} h'_u))``.
+
+ONE engine serves every consumer (see docs/forward_engine.md): the shared
+stage-1/2/3 core ``_stages123`` takes a static ``StagePlan`` describing how
+the stage-3 data-flow sweep runs —
+
+* ``scan``   — a ``lax.scan`` over all ``max_depth`` levels with dynamic
+  depth-select (the generic fallback for arbitrary batches);
+* ``banded`` — one statically-banded step per non-empty depth level of a
+  bucket (``graph.BatchBanding``): row_span + parent_rows bounds skip the
+  provably-unselected rows' dense work.  This is the training path;
+* ``exact``  — the placement-specialized sweep unrolled over one query's
+  ``QueryStatic.updates`` (only the slots that carry an operator at each
+  level are recomputed).
+
+``GNNConfig.use_pallas`` routes every plan kind through ``kernels/banked_mlp``
+(stages 0-2) and ``kernels/mp_update`` (stage 3); configs the kernels cannot
+fuse raise loudly instead of silently falling back.
 
 ``apply_gnn_traditional`` is the Exp-7b ablation: K rounds of symmetric
 neighbor aggregation with shared (non-type-specific ordering) updates.
@@ -19,14 +36,20 @@ neighbor aggregation with shared (non-type-specific ordering) updates.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import nn
 from repro.core.features import HW_FEATURE_DIM, N_OP_TYPES, OP_FEATURE_DIM
-from repro.core.graph import MAX_DEPTH, SLOT_RANGES, JointGraph, QueryStatic
+from repro.core.graph import (
+    MAX_DEPTH,
+    SLOT_RANGES,
+    BatchBanding,
+    JointGraph,
+    QueryStatic,
+)
 
 
 @dataclass(frozen=True)
@@ -101,61 +124,51 @@ def _apply_shared(params, x, cfg: GNNConfig, what: str):
     return nn.apply_mlp(params, x)
 
 
-def apply_gnn(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
-    """Forward pass for ONE graph -> (n_outputs,). vmap for batches."""
-    op_mask = g.op_mask[:, None]  # (O,1)
-    hw_mask = g.hw_mask[:, None]  # (W,1)
+# ---------------------------------------------------------------------------
+# The unified stage engine.
+# ---------------------------------------------------------------------------
 
-    # stage 0: type-specific encoders
-    h_ops = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
-    h_hw = _apply_shared(params["hw_enc"], g.hw_x, cfg, "hw_enc") * hw_mask
 
-    # stage 1: OPS -> HW (co-located operators sum into their host)
-    msg_hw = g.a_place.T @ h_ops  # (W,H)
-    h_hw = (
-        _apply_shared(params["hw_upd"], jnp.concatenate([h_hw, msg_hw], axis=-1), cfg, "hw_upd")
-        * hw_mask
+class StagePlan(NamedTuple):
+    """Static description of the stage-3 data-flow sweep (jit-cache safe).
+
+    ``kind``:
+      * ``"scan"``   — ``lax.scan`` over depths ``1..depth_max``, full row
+        width, dynamic depth-select (generic batches without banding);
+      * ``"banded"`` — unrolled over ``levels``; each level runs at its static
+        ``row_span`` with a static ``parent_rows`` contraction bound
+        (bucketed training batches, ``graph.batch_banding``);
+      * ``"exact"``  — the placement-specialized sweep: the jnp path unrolls
+        ``updates`` (per level, the exact ``(row, type, parent_rows)``
+        tuples), the Pallas path walks ``levels``.
+
+    ``levels`` entries are ``(d, row_span | None, slot_ranges, parent_rows |
+    None)`` with *absolute* row indices; ``slot_ranges`` must tile the span.
+    """
+
+    kind: str
+    depth_max: int = 0
+    levels: Tuple = ()
+    updates: Tuple = ()
+
+
+def _clip_ranges(ranges, start: int, stop: int):
+    """Restrict slot ranges to [start, stop); result tiles the span exactly."""
+    out = []
+    for t, a, b in ranges:
+        a2, b2 = max(a, start), min(b, stop)
+        if a2 < b2:
+            out.append((t, a2, b2))
+    return tuple(out)
+
+
+def _banded_plan(banding: BatchBanding, ranges=SLOT_RANGES) -> StagePlan:
+    return StagePlan(
+        "banded",
+        levels=tuple(
+            (d, span, _clip_ranges(ranges, *span), p) for d, span, p in banding.levels
+        ),
     )
-
-    # stage 2: HW -> OPS (each operator reads its host's updated state)
-    msg_ops = g.a_place @ h_hw  # (O,H)
-    h_ops = (
-        _apply_bank(params["op_upd"], jnp.concatenate([h_ops, msg_ops], axis=-1), cfg)
-        * op_mask
-    )
-
-    # stage 3: SOURCES -> OPS along the data flow, one depth level at a time
-    if cfg.use_pallas:
-        from repro.kernels.mp_update import ops as mp_ops
-
-        def depth_step(h, d):
-            return (
-                mp_ops.mp_update(
-                    params["op_upd"], h, g.a_flow, g.op_depth, g.op_mask, d, SLOT_RANGES
-                ),
-                None,
-            )
-
-    else:
-
-        def depth_step(h, d):
-            msg = g.a_flow.T @ h  # msg[v] = sum over parents u of h[u]
-            upd = _apply_bank(params["op_upd"], jnp.concatenate([h, msg], axis=-1), cfg)
-            sel = ((g.op_depth == d) & (g.op_mask > 0))[:, None]
-            return jnp.where(sel, upd, h), None
-
-    h_ops, _ = jax.lax.scan(
-        depth_step, h_ops, jnp.arange(1, cfg.max_depth + 1, dtype=g.op_depth.dtype)
-    )
-
-    # readout: sum over all (masked) node states
-    pooled = jnp.sum(h_ops * op_mask, axis=0) + jnp.sum(h_hw * hw_mask, axis=0)
-    return nn.apply_mlp(params["out"], pooled)
-
-
-def apply_gnn_batch(params: nn.Params, g: JointGraph, cfg: GNNConfig) -> jax.Array:
-    """(B, ...) graphs -> (B, n_outputs)."""
-    return jax.vmap(lambda gg: apply_gnn(params, gg, cfg))(g)
 
 
 def _bank_member(p: nn.Params, t: int) -> nn.Params:
@@ -163,64 +176,37 @@ def _bank_member(p: nn.Params, t: int) -> nn.Params:
     return {"layers": [{"w": l["w"][t], "b": l["b"][t]} for l in p["layers"]]}
 
 
-def _placed_stages123(
-    params: nn.Params,
-    h_ops0: jax.Array,  # (O', H) stage-0 operator states (any slot layout)
-    h_hw0: jax.Array,  # (W', H) stage-0 host states
-    a_place: jax.Array,  # (B, O', W')
-    a_flow: jax.Array,  # (O', O')
-    op_depth: jax.Array,  # (O',) int
-    updates,  # per-depth ((row, type, parent_rows), ...) in THIS layout
-    ranges,  # slot ranges (type, start, stop) in THIS layout
-    cfg: GNNConfig,
-    op_mask: Optional[jax.Array] = None,  # (O',1) or None when no padded rows
-    hw_mask: Optional[jax.Array] = None,  # (W',1) or None when no padded rows
-    pallas_levels=None,  # per-depth (d, row_span, level_ranges) for mp_update
-) -> jax.Array:
-    """Stages 1-3 + readout of the placement-specialized forward.
+def _dataflow_sweep(
+    params, h, a_flow, op_depth, op_mask, cfg: GNNConfig, ranges, plan: StagePlan
+):
+    """Stage 3: SOURCES->OPS along the data flow, per the static plan.
 
-    Layout-agnostic core shared by ``apply_gnn_placed`` (full padded slot
-    layout) and ``apply_gnn_placed_stacked`` (trimmed active-slot layout,
-    where the masks are provably all-ones and passed as None).  Under
-    ``use_pallas``, stage 3 walks ``pallas_levels``: one fused ``mp_update``
-    launch per depth level, statically restricted to ``row_span`` when the
-    layout makes each level contiguous (the depth-sorted trimmed layout).
+    ``h``/``a_flow``/``op_depth`` are rank-polymorphic (``(N, .)`` single,
+    ``(B, N, .)`` batched); the ``exact`` jnp branch is the one exception —
+    it indexes candidate batches explicitly (the placed path's layout).
     """
-    b = a_place.shape[0]
-
-    # stage 1: OPS -> HW per candidate
-    msg_hw = jnp.einsum("bow,oh->bwh", a_place, h_ops0)
-    h_hw = _apply_shared(
-        params["hw_upd"],
-        jnp.concatenate([jnp.broadcast_to(h_hw0, (b,) + h_hw0.shape), msg_hw], axis=-1),
-        cfg,
-        "hw_upd",
-    )
-    if hw_mask is not None:
-        h_hw = h_hw * hw_mask
-
-    # stage 2: HW -> OPS per candidate
-    msg_ops = jnp.einsum("bow,bwh->boh", a_place, h_hw)
-    h = _apply_bank(
-        params["op_upd"],
-        jnp.concatenate([jnp.broadcast_to(h_ops0, (b,) + h_ops0.shape), msg_ops], axis=-1),
-        cfg,
-        ranges,
-    )
-    if op_mask is not None:
-        h = h * op_mask
-
-    # stage 3: data-flow sweep over only the depth levels the query has
     if cfg.use_pallas:
         from repro.kernels.mp_update import ops as mp_ops
 
         _require_fusable(params["op_upd"], "op_upd (stage-3 mp_update)")
-        mask_vec = op_mask[:, 0] if op_mask is not None else jnp.ones_like(op_depth, jnp.float32)
-        if pallas_levels is None:  # full layout: no contiguous spans available
-            pallas_levels = tuple(
-                (d, None, ranges, None) for d, level in enumerate(updates, start=1) if level
+        mask_vec = (
+            op_mask[..., 0] if op_mask is not None else jnp.ones(h.shape[:-1], jnp.float32)
+        )
+        if plan.kind == "scan":
+
+            def step(hh, d):
+                return (
+                    mp_ops.mp_update(
+                        params["op_upd"], hh, a_flow, op_depth, mask_vec, d, ranges
+                    ),
+                    None,
+                )
+
+            h, _ = jax.lax.scan(
+                step, h, jnp.arange(1, plan.depth_max + 1, dtype=op_depth.dtype)
             )
-        for d, span, level_ranges, parent_hi in pallas_levels:
+            return h
+        for d, span, level_ranges, parent_hi in plan.levels:
             h = mp_ops.mp_update(
                 params["op_upd"],
                 h,
@@ -232,18 +218,183 @@ def _placed_stages123(
                 row_span=span,
                 parent_rows=parent_hi,
             )
-    else:
-        for level in updates:
-            cols = [s for s, _, _ in level]
-            news = []
-            for s, t, parents in level:
-                msg = sum(h[:, p] for p in parents[1:]) + h[:, parents[0]]
-                x = jnp.concatenate([h[:, s], msg], axis=-1)  # (B, 2H)
-                news.append(nn.apply_mlp(_bank_member(params["op_upd"], t), x))
-            h = h.at[:, jnp.asarray(cols)].set(jnp.stack(news, axis=1))
+        return h
 
-    pooled = jnp.sum(h, axis=1) + jnp.sum(h_hw, axis=1)  # rows are pre-masked
+    sel_mask = None if op_mask is None else op_mask[..., 0] > 0
+
+    def full_step(hh, d):
+        msg = jnp.swapaxes(a_flow, -1, -2) @ hh  # msg[v] = sum over parents u
+        upd = _apply_bank(params["op_upd"], jnp.concatenate([hh, msg], axis=-1), cfg, ranges)
+        sel = op_depth == d
+        if sel_mask is not None:
+            sel = sel & sel_mask
+        return jnp.where(sel[..., None], upd, hh)
+
+    if plan.kind == "scan":
+        h, _ = jax.lax.scan(
+            lambda hh, d: (full_step(hh, d), None),
+            h,
+            jnp.arange(1, plan.depth_max + 1, dtype=op_depth.dtype),
+        )
+        return h
+    if plan.kind == "banded":
+        # the kernel oracle owns the span geometry; the banked apply is
+        # injected so >2-layer (unfusable, jnp-only) banks work too
+        from repro.kernels.mp_update.ref import mp_update_ref
+
+        mask_vec = (
+            op_mask[..., 0] if op_mask is not None else jnp.ones(h.shape[:-1], jnp.float32)
+        )
+        for d, span, level_ranges, parent_hi in plan.levels:
+            h = mp_update_ref(
+                params["op_upd"],
+                h,
+                a_flow,
+                op_depth,
+                mask_vec,
+                jnp.asarray(d, op_depth.dtype),
+                level_ranges,
+                row_span=span,
+                parent_rows=parent_hi,
+                apply_fn=nn.apply_mlp_bank_slotted,
+            )
+        return h
+    assert plan.kind == "exact", plan.kind
+    for level in plan.updates:
+        cols = [s for s, _, _ in level]
+        news = []
+        for s, t, parents in level:
+            msg = sum(h[:, p] for p in parents[1:]) + h[:, parents[0]]
+            x = jnp.concatenate([h[:, s], msg], axis=-1)  # (B, 2H)
+            news.append(nn.apply_mlp(_bank_member(params["op_upd"], t), x))
+        h = h.at[:, jnp.asarray(cols)].set(jnp.stack(news, axis=1))
+    return h
+
+
+def _stages123(
+    params: nn.Params,
+    h_ops0: jax.Array,  # (..., O', H) per-graph states, or (O', H) shared skeleton
+    h_hw0: jax.Array,  # (..., W', H) / (W', H) matching h_ops0
+    a_place: jax.Array,  # (..., O', W'); a leading candidate axis when shared
+    a_flow: jax.Array,  # (..., O', O') or shared (O', O')
+    op_depth: jax.Array,  # (..., O') int
+    cfg: GNNConfig,
+    *,
+    ranges,  # slot ranges (type, start, stop) in THIS layout
+    plan: StagePlan,
+    op_mask: Optional[jax.Array] = None,  # (..., O', 1) or None when no padded rows
+    hw_mask: Optional[jax.Array] = None,  # (..., W', 1) or None when no padded rows
+) -> jax.Array:
+    """Stages 1-3 + readout: the single core behind every forward.
+
+    Two calling conventions, told apart by rank: the *generic* one (training,
+    bulk scoring) passes per-graph stage-0 states with the same batch rank as
+    ``a_place``; the *placed* one passes the unbatched shared-skeleton states
+    against a ``(B, O', W')`` candidate batch — stage-0 work is then reused
+    across all candidates and only broadcast where a stage needs it.
+    """
+    shared_skeleton = h_ops0.ndim < a_place.ndim
+
+    # stage 1: OPS -> HW
+    if shared_skeleton:
+        b = a_place.shape[0]
+        msg_hw = jnp.einsum("bow,oh->bwh", a_place, h_ops0)
+        hw_in = jnp.concatenate(
+            [jnp.broadcast_to(h_hw0, (b,) + h_hw0.shape), msg_hw], axis=-1
+        )
+    else:
+        msg_hw = jnp.einsum("...ow,...oh->...wh", a_place, h_ops0)
+        hw_in = jnp.concatenate([jnp.broadcast_to(h_hw0, msg_hw.shape), msg_hw], axis=-1)
+    h_hw = _apply_shared(params["hw_upd"], hw_in, cfg, "hw_upd")
+    if hw_mask is not None:
+        h_hw = h_hw * hw_mask
+
+    # stage 2: HW -> OPS
+    msg_ops = jnp.einsum("...ow,...wh->...oh", a_place, h_hw)
+    if shared_skeleton:
+        ops_in = jnp.concatenate(
+            [jnp.broadcast_to(h_ops0, msg_ops.shape), msg_ops], axis=-1
+        )
+    else:
+        ops_in = jnp.concatenate([h_ops0, msg_ops], axis=-1)
+    h = _apply_bank(params["op_upd"], ops_in, cfg, ranges)
+    if op_mask is not None:
+        h = h * op_mask
+
+    # stage 3: data-flow sweep per the static plan
+    h = _dataflow_sweep(params, h, a_flow, op_depth, op_mask, cfg, ranges, plan)
+
+    # readout: rows are pre-masked, sum over the node axes
+    pooled = jnp.sum(h, axis=-2) + jnp.sum(h_hw, axis=-2)
     return nn.apply_mlp(params["out"], pooled)
+
+
+def apply_gnn_batch(
+    params: nn.Params,
+    g: JointGraph,
+    cfg: GNNConfig,
+    banding: Optional[BatchBanding] = None,
+) -> jax.Array:
+    """Forward for a padded graph (batch) -> (..., n_outputs).
+
+    Rank-polymorphic: a single ``(N, .)`` graph or a ``(B, N, .)`` batch run
+    the same code — banked MLPs execute ONCE across the whole padded batch
+    (one launch per stage), not per-graph under vmap.  ``banding`` (from
+    ``graph.batch_banding``, static per bucket) replaces the full
+    ``max_depth`` stage-3 scan with one banded step per non-empty depth
+    level; without it the sweep falls back to the seed-equivalent full scan.
+    ``cfg.use_pallas`` routes stages 0-2 through ``kernels/banked_mlp`` and
+    stage 3 through ``kernels/mp_update`` (see module docstring).
+    """
+    op_mask = g.op_mask[..., None]
+    hw_mask = g.hw_mask[..., None]
+    h_ops0 = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
+    h_hw0 = _apply_shared(params["hw_enc"], g.hw_x, cfg, "hw_enc") * hw_mask
+    plan = (
+        StagePlan("scan", depth_max=cfg.max_depth)
+        if banding is None
+        else _banded_plan(banding)
+    )
+    return _stages123(
+        params,
+        h_ops0,
+        h_hw0,
+        g.a_place,
+        g.a_flow,
+        g.op_depth,
+        cfg,
+        ranges=SLOT_RANGES,
+        plan=plan,
+        op_mask=op_mask,
+        hw_mask=hw_mask,
+    )
+
+
+def apply_gnn(
+    params: nn.Params,
+    g: JointGraph,
+    cfg: GNNConfig,
+    banding: Optional[BatchBanding] = None,
+) -> jax.Array:
+    """Forward pass for ONE graph -> (n_outputs,); same engine as the batch."""
+    return apply_gnn_batch(params, g, cfg, banding)
+
+
+def apply_gnn_stacked(
+    params: nn.Params,
+    g: JointGraph,
+    cfg: GNNConfig,
+    banding: Optional[BatchBanding] = None,
+) -> jax.Array:
+    """ONE forward for member-stacked params over a shared graph batch.
+
+    ``params`` leaves carry a leading member axis (an ensemble's members, or
+    several metrics' ensembles concatenated by ``model.stack_metric_models``);
+    returns ``(members, B)`` raw outputs.  The batch — including its banding
+    plan — is shared across members, so a training step issues one stacked
+    forward instead of one per member.
+    """
+    return jax.vmap(lambda p: apply_gnn_batch(p, g, cfg, banding))(params)[..., 0]
 
 
 def apply_gnn_placed(
@@ -283,16 +434,26 @@ def apply_gnn_placed(
     h_ops0 = _apply_bank(params["op_enc"], skel.op_x, cfg) * op_mask
     h_hw0 = _apply_shared(params["hw_enc"], skel.hw_x, cfg, "hw_enc") * hw_mask
 
-    return _placed_stages123(
+    # full padded layout: no contiguous spans available, full-width levels
+    plan = StagePlan(
+        "exact",
+        levels=tuple(
+            (d, None, SLOT_RANGES, None)
+            for d, level in enumerate(static.updates, start=1)
+            if level
+        ),
+        updates=static.updates,
+    )
+    return _stages123(
         params,
         h_ops0,
         h_hw0,
         a_place,
         skel.a_flow,
         skel.op_depth,
-        static.updates,
-        SLOT_RANGES,
         cfg,
+        ranges=SLOT_RANGES,
+        plan=plan,
         op_mask=op_mask,
         hw_mask=hw_mask,
     )
@@ -327,7 +488,8 @@ def _trimmed_layout(static: QueryStatic):
     same-type operators adjacent, so banked MLPs still see few type runs.
     Returns (order: slot ids, ranges: type runs over the whole order,
     updates: stage-3 updates remapped to row positions, levels: per nonempty
-    depth level (d, (start, stop) row span, type runs inside the span)).
+    depth level (d, (start, stop) row span, type runs inside the span,
+    parent-row bound)).
     """
     depth_of = {s: 0 for s in static.active}
     for d, level in enumerate(static.updates, start=1):
@@ -391,6 +553,7 @@ def apply_gnn_placed_stacked(
     op_depth = skel.op_depth[idx]  # (n,)
     a_place = a_place[:, idx, :n_hw]  # (B, n, n_hw)
     B = a_place.shape[0]
+    plan = StagePlan("exact", levels=levels, updates=updates)
 
     # stage 0 is placement-invariant: once per member, outside the chunk scan
     def stage0(pp):
@@ -402,9 +565,8 @@ def apply_gnn_placed_stacked(
     h0_ops, h0_hw = jax.vmap(stage0)(params)  # (E, n, H), (E, n_hw, H)
 
     def member_fwd(pp, h_ops0, h_hw0, ap):
-        return _placed_stages123(
-            pp, h_ops0, h_hw0, ap, a_flow, op_depth, updates, ranges, cfg,
-            pallas_levels=levels,
+        return _stages123(
+            pp, h_ops0, h_hw0, ap, a_flow, op_depth, cfg, ranges=ranges, plan=plan
         )[..., 0]
 
     fwd = jax.vmap(member_fwd, in_axes=(0, 0, 0, None))

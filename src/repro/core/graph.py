@@ -25,17 +25,27 @@ MAX_HW = 8
 # keeping the stage-3 scan short (it dominates step time).
 MAX_DEPTH = 8
 
-# Canonical slot layout: operator i of type t occupies a slot inside t's
-# static range. Type-specific MLPs then run on static slices instead of
-# masked full-width banks (see nn.apply_mlp_bank_slotted) — a 5x FLOP cut
-# that is also the layout the Pallas kernel tiles on.
+# Canonical DEPTH-MAJOR slot layout: operator i of type t occupies a slot
+# inside t's static range, and the ranges themselves are ordered by where the
+# type sits in the data flow (sources -> filters -> joins -> aggregations ->
+# sink).  Two properties follow:
+#   * type-specific MLPs run on static slices instead of masked full-width
+#     banks (see nn.apply_mlp_bank_slotted) — a 5x FLOP cut that is also the
+#     layout the Pallas kernel tiles on;
+#   * topological depth is (for every corpus query shape: linear chains,
+#     2-way and 3-way joins) non-decreasing along the slot axis, so each
+#     stage-3 depth level occupies a narrow row band and ``batch_banding``
+#     can hand the message-passing kernel tight static ``row_span`` /
+#     ``parent_rows`` bounds.  Correctness never depends on the monotonicity
+#     (banding is computed from the actual depths and only ever widens), only
+#     the bands' tightness does.
 #   type id: SOURCE=0, FILTER=1, AGGREGATE=2, JOIN=3, SINK=4 (features.OP_TYPE_IDS)
 SLOT_RANGES = (
-    (0, 0, 3),  # up to 3 sources
-    (1, 3, 7),  # up to 4 filters
-    (2, 7, 9),  # up to 2 aggregations
-    (3, 9, 11),  # up to 2 joins
-    (4, 11, 12),  # 1 sink
+    (0, 0, 3),  # up to 3 sources (depth 0)
+    (1, 3, 7),  # up to 4 filters (source chains, shallow)
+    (3, 7, 9),  # up to 2 joins (after the filtered chains)
+    (2, 9, 11),  # up to 2 aggregations (after joins in the corpus shapes)
+    (4, 11, 12),  # 1 sink (always the deepest node)
 )
 
 
@@ -255,28 +265,62 @@ def batch_graphs(graphs: List[JointGraph]) -> JointGraph:
     return JointGraph(*[np.stack([getattr(g, f) for g in graphs]) for f in JointGraph._fields])
 
 
-def bucket_size(n: int) -> int:
-    """Smallest power of two >= n: the jit shape buckets the scorer pads to."""
-    assert n > 0, n
-    return 1 << (n - 1).bit_length()
+# Padding / shape-bucket policy shared with the training pipeline lives in
+# core/bucketing.py; re-exported here because the graph layout and its
+# padding contract are one interface.
+from repro.core.bucketing import bucket_size, pad_batch  # noqa: E402,F401
 
 
-def pad_batch(g: JointGraph, target: int) -> JointGraph:
-    """Pad a batched graph along axis 0 to ``target`` rows.
+class BatchBanding(NamedTuple):
+    """Static stage-3 plan for a *bucket* of graphs in the depth-major layout.
 
-    Padding repeats the last graph, so every row stays a well-formed graph
-    (masks and slot types intact) and bucketed jit shapes never see garbage;
-    callers slice predictions back to the true count.
+    ``levels`` holds, for every depth ``d >= 1`` at which ANY graph of the
+    bucket has an operator, the tuple ``(d, (start, stop), parent_rows)``:
+
+    * ``(start, stop)`` — conservative row span covering every bucket graph's
+      depth-``d`` rows.  Rows outside the span are provably never selected at
+      depth ``d`` for any graph in the bucket, so the message-passing step can
+      statically skip their dense work (``kernels/mp_update``'s ``row_span``);
+    * ``parent_rows`` — exclusive upper bound on the rows that feed messages
+      into the span: ``a_flow[u, v] == 0`` for every ``u >= parent_rows`` and
+      every selected ``v``, across the whole bucket (the kernel's contraction
+      bound).
+
+    Being a tuple-of-ints NamedTuple it is hashable and serves as the static
+    jit-cache key for the bucketed training step: one trace per bucket, and
+    the scan runs ``len(levels)`` banded steps instead of MAX_DEPTH full-width
+    ones.  The banding is *conservative*: valid for every sub-batch drawn from
+    the bucket (padding included, since padded rows repeat bucket graphs).
     """
-    assert g.batched, "pad_batch needs a batched graph"
-    n = g.op_x.shape[0]
-    assert n <= target, (n, target)
-    if n == target:
-        return g
-    reps = [(0, target - n)] + [(0, 0)] * (g.op_x.ndim - 1)
-    return JointGraph(
-        *[np.pad(np.asarray(x), reps[: x.ndim], mode="edge") for x in g]
-    )
+
+    levels: Tuple[Tuple[int, Tuple[int, int], int], ...]
+
+
+def batch_banding(g: JointGraph) -> BatchBanding:
+    """Host-side (numpy) banding for a batched graph — see ``BatchBanding``.
+
+    Computed once per (n_ops, depth) bucket at dataset-bucketing time, NOT per
+    batch: all batches of one bucket must share the static plan or the jitted
+    step would retrace per batch.
+    """
+    depth = np.asarray(g.op_depth)
+    mask = np.asarray(g.op_mask) > 0
+    flow = np.asarray(g.a_flow)
+    if depth.ndim == 1:  # single graph: treat as a one-element bucket
+        depth, mask, flow = depth[None], mask[None], flow[None]
+    active = depth * mask
+    levels = []
+    for d in range(1, int(active.max(initial=0)) + 1):
+        sel = (depth == d) & mask  # (B, N)
+        if not sel.any():
+            continue
+        rows = np.flatnonzero(sel.any(axis=0))
+        span = (int(rows[0]), int(rows[-1]) + 1)
+        # parents of any selected row, over the whole bucket
+        parents = np.flatnonzero((flow * sel[:, None, :]).any(axis=(0, 2)))
+        parent_rows = int(parents[-1]) + 1 if parents.size else 1
+        levels.append((d, span, parent_rows))
+    return BatchBanding(levels=tuple(levels))
 
 
 # -- ablation transforms (Exp 7a) ----------------------------------------------

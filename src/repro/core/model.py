@@ -24,10 +24,11 @@ from repro.core.gnn import (
     apply_gnn_batch,
     apply_gnn_placed,
     apply_gnn_placed_stacked,
+    apply_gnn_stacked,
     apply_gnn_traditional,
     init_gnn,
 )
-from repro.core.graph import JointGraph, QueryStatic
+from repro.core.graph import BatchBanding, JointGraph, QueryStatic
 
 REGRESSION_METRICS = ("throughput", "latency_p", "latency_e")
 CLASSIFICATION_METRICS = ("backpressure", "success")
@@ -63,12 +64,25 @@ def _forward_single(params, g: JointGraph, cfg: CostModelConfig) -> jax.Array:
     return out[..., 0]  # (B,)
 
 
-def forward_ensemble(params, g: JointGraph, cfg: CostModelConfig) -> jax.Array:
+def forward_ensemble(
+    params,
+    g: JointGraph,
+    cfg: CostModelConfig,
+    banding: Optional[BatchBanding] = None,
+) -> jax.Array:
     """(E-stacked params, batch of graphs) -> raw outputs (E, B).
 
     Raw output is log1p(cost) for regression, a logit for classification.
+    One stacked engine forward evaluates every member (``gnn.apply_gnn_stacked``
+    — the member axis rides the same launch per stage, it is not one forward
+    per member); ``banding`` is the bucket's static stage-3 plan from
+    ``graph.batch_banding`` (None: full-depth scan, valid for any batch).
+    The ``traditional_mp`` ablation lacks the 3-stage structure the engine
+    exploits and keeps its per-graph path.
     """
-    return jax.vmap(lambda p: _forward_single(p, g, cfg))(params)
+    if cfg.traditional_mp:
+        return jax.vmap(lambda p: _forward_single(p, g, cfg))(params)
+    return apply_gnn_stacked(params, g, cfg.gnn, banding)
 
 
 # -- losses ---------------------------------------------------------------------
@@ -90,9 +104,15 @@ def loss_fn(cfg: CostModelConfig) -> Callable[[jax.Array, jax.Array], jax.Array]
     return msle_loss if cfg.task == "regression" else bce_loss
 
 
-def ensemble_loss(params, g: JointGraph, y: jax.Array, cfg: CostModelConfig) -> jax.Array:
+def ensemble_loss(
+    params,
+    g: JointGraph,
+    y: jax.Array,
+    cfg: CostModelConfig,
+    banding: Optional[BatchBanding] = None,
+) -> jax.Array:
     """Sum of member losses (members are independent; grads don't mix)."""
-    raw = forward_ensemble(params, g, cfg)  # (E, B)
+    raw = forward_ensemble(params, g, cfg, banding)  # (E, B)
     per_member = jax.vmap(lambda r: loss_fn(cfg)(r, y))(raw)
     return jnp.sum(per_member)
 
@@ -203,7 +223,7 @@ def _split_votes(raw: np.ndarray, stacked: StackedEnsembles) -> Dict[str, np.nda
 def _jitted_forward_stacked(gnn: GNNConfig, traditional_mp: bool, lowering: str = "ref"):
     # metric only selects the loss/vote, never the forward; any metric works
     cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
-    return jax.jit(lambda p, g: jax.vmap(lambda pp: _forward_single(pp, g, cfg))(p))
+    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
 
 
 @lru_cache(maxsize=256)

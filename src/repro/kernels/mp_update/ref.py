@@ -20,6 +20,7 @@ def mp_update_ref(
     slot_ranges: Sequence[Tuple[int, int, int]],
     row_span=None,  # static (s, e): restrict the update to rows [s, e)
     parent_rows=None,  # static p: a_flow[u, v] == 0 for u >= p, v in the span
+    apply_fn=banked_mlp_slotted_ref,  # (params, x, slot_ranges) -> y
 ) -> jax.Array:
     """One SOURCES->OPS depth step: aggregate parents, update, select.
 
@@ -27,10 +28,13 @@ def mp_update_ref(
     ``slot_ranges`` are absolute row indices inside the span); rows outside
     pass through — mirrors the kernel's static-span fast path.
     ``parent_rows`` bounds the aggregation's contraction like the kernel's.
+    This function owns the span geometry for every jnp consumer: the banded
+    training sweep passes its own banked-MLP ``apply_fn`` (supporting >2
+    layers) instead of re-implementing the slicing.
     """
     if row_span is None:
         msg = jnp.swapaxes(a_flow, -1, -2) @ h  # msg[v] = sum_{u: u->v} h[u]
-        upd = banked_mlp_slotted_ref(params, jnp.concatenate([h, msg], axis=-1), slot_ranges)
+        upd = apply_fn(params, jnp.concatenate([h, msg], axis=-1), slot_ranges)
         sel = ((depth == d) & (mask > 0))[..., None]
         return jnp.where(sel, upd, h)
     s, e = row_span
@@ -38,7 +42,7 @@ def mp_update_ref(
     msg = jnp.swapaxes(a_flow[..., :p, s:e], -1, -2) @ h[..., :p, :]  # (..., e-s, H)
     z = jnp.concatenate([h[..., s:e, :], msg], axis=-1)
     shifted = tuple((t, start - s, stop - s) for t, start, stop in slot_ranges)
-    upd = banked_mlp_slotted_ref(params, z, shifted)
+    upd = apply_fn(params, z, shifted)
     sel = ((depth[..., s:e] == d) & (mask[..., s:e] > 0))[..., None]
     return jnp.concatenate(
         [h[..., :s, :], jnp.where(sel, upd, h[..., s:e, :]), h[..., e:, :]], axis=-2

@@ -36,7 +36,7 @@ from repro.core.model import (
 from repro.dsps import ranges
 from repro.dsps.generator import GeneratorConfig, WorkloadGenerator
 from repro.launch import artifacts
-from repro.training.batching import dataset_from_traces, split_dataset
+from repro.training.batching import dataset_from_traces, split_dataset, split_indices
 from repro.training.loop import TrainConfig, train_cost_model, train_flat_model
 
 CORPUS_SEED = 42
@@ -115,11 +115,8 @@ def stage_main(epochs: int):
 def stage_flat(epochs: int):
     traces = main_corpus()
     x = featurize_flat_traces(traces)
-    rng = np.random.default_rng(SPLIT_SEED)
-    perm = rng.permutation(len(traces))  # match split_dataset's split sizes
-    n_tr = int(0.8 * len(traces))
-    n_va = int(0.1 * len(traces))
-    idx_tr, idx_va = perm[:n_tr], perm[n_tr : n_tr + n_va]
+    # the same partition split_dataset uses for the GNN models
+    idx_tr, idx_va, _ = split_indices(len(traces), seed=SPLIT_SEED)
     from repro.core.model import label_array
 
     for metric in ALL_METRICS:

@@ -12,11 +12,16 @@ from repro.training.optim import (
     global_norm,
 )
 from repro.training.batching import (
+    BucketSpec,
     GraphDataset,
-    dataset_from_traces,
-    split_dataset,
     batches,
+    bucket_dataset,
+    bucketed_batches,
+    dataset_from_traces,
+    n_batches,
     prefetch,
+    split_dataset,
+    split_indices,
 )
 from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.training.compression import (

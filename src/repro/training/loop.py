@@ -1,11 +1,14 @@
 """Training loops for the COSTREAM cost models + the flat-vector baseline.
 
 The same ``train_cost_model`` drives the single-host CPU path and the SPMD
-mesh path: graph batches are sharded over the (pod, data) axes, the vmapped
-ensemble over ``model``. Optional gradient compression (top-k error feedback
-or int8) is applied in the DP reduction path under shard_map. Checkpoints are
-written atomically every ``ckpt_every`` steps; ``resume=True`` continues from
-the newest one (fault tolerance).
+mesh path: graph batches are sharded over the (pod, data) axes, the stacked
+ensemble over ``model``.  Training consumes the unified GNN engine
+(docs/forward_engine.md): epochs iterate (n_ops, depth) buckets whose static
+``BatchBanding`` keys the jitted step's trace cache, and each step issues ONE
+stacked forward for all ensemble members.  Optional gradient compression
+(top-k error feedback or int8) is applied in the DP reduction path under
+shard_map. Checkpoints are written atomically every ``ckpt_every`` steps;
+``resume=True`` continues from the newest one (fault tolerance).
 """
 
 from __future__ import annotations
@@ -19,21 +22,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.model import (
-    CostModelConfig,
-    ensemble_loss,
-    forward_ensemble,
-    init_cost_model,
-    predict,
-)
 from repro.core.flat_vector import (
     FlatVectorConfig,
     forward_flat,
     init_flat_model,
 )
-from repro.core.model import bce_loss, msle_loss
+from repro.core.graph import batch_banding
+from repro.core.model import (
+    CostModelConfig,
+    bce_loss,
+    ensemble_loss,
+    init_cost_model,
+    msle_loss,
+)
 from repro.training import optim
-from repro.training.batching import GraphDataset, batches, prefetch
+from repro.training.batching import (
+    GraphDataset,
+    bucket_dataset,
+    bucketed_batches,
+    n_batches,
+    prefetch,
+)
 from repro.training.checkpoint import restore_checkpoint, save_checkpoint
 from repro.training.compression import (
     EFState,
@@ -88,7 +97,10 @@ def train_cost_model(
     key, init_key = jax.random.split(key)
     params = init_params if init_params is not None else init_cost_model(init_key, model_cfg)
 
-    steps_per_epoch = max(1, len(dataset_train) // train_cfg.batch_size)
+    # bucket once: every epoch then iterates depth-major (n_ops, depth)
+    # buckets whose static banding keys the jitted step's trace cache
+    dataset_train, buckets = bucket_dataset(dataset_train)
+    steps_per_epoch = max(1, n_batches(buckets, train_cfg.batch_size))
     total = steps_per_epoch * train_cfg.epochs
     opt = optim.adam(
         lr=optim.cosine_schedule(train_cfg.lr, total, warmup_steps=min(100, total // 10)),
@@ -107,10 +119,13 @@ def train_cost_model(
             params, opt_state, ef = restored
             start_step = int(step)
 
-    @partial(jax.jit, donate_argnums=(0, 1, 2))
-    def train_step(params, opt_state, ef, g, y, key):
+    # ``banding`` is the bucket's static stage-3 plan: part of the jit cache
+    # key (one trace per bucket), not a traced operand.  The loss runs ONE
+    # stacked engine forward for all ensemble members.
+    @partial(jax.jit, static_argnums=(6,), donate_argnums=(0, 1, 2))
+    def train_step(params, opt_state, ef, g, y, key, banding):
         def loss(p):
-            return ensemble_loss(p, g, y, model_cfg)
+            return ensemble_loss(p, g, y, model_cfg, banding)
 
         loss_val, grads = jax.value_and_grad(loss)(params)
         grads, ef = _maybe_compress(grads, ef, key, train_cfg)
@@ -118,9 +133,9 @@ def train_cost_model(
         params = optim.apply_updates(params, updates)
         return params, opt_state, ef, loss_val
 
-    @jax.jit
-    def val_loss_fn(params, g, y):
-        return ensemble_loss(params, g, y, model_cfg) / model_cfg.n_ensemble
+    @partial(jax.jit, static_argnums=(3,))
+    def val_loss_fn(params, g, y, banding):
+        return ensemble_loss(params, g, y, model_cfg, banding) / model_cfg.n_ensemble
 
     rng = np.random.default_rng(train_cfg.seed + 1)
     history: List[Dict[str, float]] = []
@@ -131,22 +146,31 @@ def train_cost_model(
 
     val_g = jax.tree_util.tree_map(jnp.asarray, dataset_val.graphs)
     val_y = jnp.asarray(dataset_val.labels)
+    val_banding = batch_banding(dataset_val.graphs) if len(dataset_val) else None
 
     for epoch in range(train_cfg.epochs):
         t0 = time.time()
         epoch_losses = []
-        it = prefetch(batches(dataset_train, train_cfg.batch_size, rng=rng))
-        for g, y in it:
+        # prefetch worker produces device-resident depth-major batches
+        it = prefetch(
+            bucketed_batches(
+                dataset_train, buckets, train_cfg.batch_size, rng=rng, device=True
+            )
+        )
+        for g, y, banding in it:
             key, sub = jax.random.split(key)
-            g = jax.tree_util.tree_map(jnp.asarray, g)
             params, opt_state, ef, loss_val = train_step(
-                params, opt_state, ef, g, jnp.asarray(y), sub
+                params, opt_state, ef, g, y, sub, banding
             )
             epoch_losses.append(float(loss_val))
             step += 1
             if train_cfg.ckpt_dir and step % train_cfg.ckpt_every == 0:
                 save_checkpoint(train_cfg.ckpt_dir, step, (params, opt_state, ef))
-        vl = float(val_loss_fn(params, val_g, val_y)) if len(dataset_val) else float("nan")
+        vl = (
+            float(val_loss_fn(params, val_g, val_y, val_banding))
+            if len(dataset_val)
+            else float("nan")
+        )
         history.append(
             {
                 "epoch": epoch,
