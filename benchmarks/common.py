@@ -19,7 +19,6 @@ from repro.core import (
     balanced_indices,
     batch_graphs,
     build_graph,
-    predict,
     qerror_summary,
 )
 from repro.core.flat_vector import featurize_flat_traces
@@ -27,6 +26,7 @@ from repro.core.model import label_array
 from repro.dsps.generator import Trace, WorkloadGenerator
 from repro.launch import artifacts
 from repro.launch.train import CORPUS_SEED, SPLIT_SEED, main_corpus
+from repro.serve import CostEstimator
 from repro.training.loop import predict_flat
 
 RESULTS_DIR = artifacts.path("results")
@@ -64,14 +64,19 @@ def eval_costream(
 ) -> Dict[str, Dict]:
     out: Dict[str, Dict] = {}
     g_all = graphs_of(traces, transform)
+    models = {}
     for metric in metrics:
         name = f"{prefix}_{metric}"
         if not artifacts.exists("costream", name):
             out[metric] = {"missing": True}
             continue
-        params, cfg = artifacts.load_cost_model(name)
+        models[metric] = artifacts.load_cost_model(name)
+    if not models:
+        return out
+    # one facade call: all present ensembles fused over the shared batch
+    preds = CostEstimator(models).estimate(g_all, metrics=tuple(models))
+    for metric, pred in preds.items():
         y = label_array(traces, metric)
-        pred = predict(params, g_all, cfg)
         if metric in REGRESSION_METRICS:
             mask = y > 0  # failed runs have zero cost; the paper predicts costs
             out[metric] = qerror_summary(y[mask], pred[mask])
@@ -113,13 +118,20 @@ def eval_flat(
     return out
 
 
-def load_placement_models(prefix: str = "main"):
+def serving_estimator(prefix: str = "main") -> CostEstimator:
+    """The online-path CostEstimator for ``prefix``'s trained models.
+
+    Prefers the versioned serving bundle (``artifacts/bundles/<prefix>``,
+    emitted by launch/train.py); falls back to assembling the loose
+    per-metric checkpoints for partially trained runs."""
+    if artifacts.bundle_exists(prefix):
+        return CostEstimator.from_bundle(artifacts.load_bundle(prefix))
     models = {}
     for metric in ("latency_p", "throughput", "success", "backpressure"):
         name = f"{prefix}_{metric}"
         if artifacts.exists("costream", name):
             models[metric] = artifacts.load_cost_model(name)
-    return models
+    return CostEstimator(models)
 
 
 class FlatRanker:

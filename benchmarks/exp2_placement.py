@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import FlatRanker, fmt_table, load_placement_models, save_result
+from benchmarks.common import FlatRanker, fmt_table, save_result, serving_estimator
 from repro.dsps import WorkloadGenerator, simulate
 from repro.dsps.simulator import SimulatorConfig
 from repro.placement import (
@@ -26,8 +26,7 @@ SIM = SimulatorConfig(noise_sigma=0.0)  # placement quality measured noise-free
 
 
 def exp2a(n_queries: int = 50, k: int = 48, seed: int = 1234):
-    models = load_placement_models()
-    opt = PlacementOptimizer(models)
+    opt = PlacementOptimizer(serving_estimator())
     flat = FlatRanker()
     gen = WorkloadGenerator(seed=seed)
     rng = np.random.default_rng(seed)
@@ -70,8 +69,7 @@ def exp2a(n_queries: int = 50, k: int = 48, seed: int = 1234):
 
 
 def exp2b(n_queries: int = 25, seed: int = 4321):
-    models = load_placement_models()
-    opt = PlacementOptimizer(models)
+    opt = PlacementOptimizer(serving_estimator())
     gen = WorkloadGenerator(seed=seed)
     rng = np.random.default_rng(seed)
     slowdowns, overheads = [], []

@@ -6,9 +6,10 @@ Compares four scoring paths on the same candidate set and the same
   seed path     ``score_candidates``   — per-candidate ``build_graph`` loop,
                 graph batch rebuilt + re-transferred once PER METRIC;
   unfused path  the PR-1 fast path — one skeleton, but one
-                ``predict_placements`` forward per metric (E launches each);
-  fused path    ``score_assignments`` — per-metric ensembles stacked into ONE
-                vmapped forward (``predict_placements_fused``), jnp banks;
+                ``placed_predict`` forward per metric (E launches each);
+  fused path    ``CostEstimator.score`` (via ``score_assignments``) —
+                per-metric ensembles stacked into ONE vmapped forward
+                (``placed_predict_fused``), jnp banks;
   fused+pallas  the fused path with ``use_pallas=True``: stage-0/1/2 through
                 the banked-MLP kernel, stage-3 through mp-update.  NOTE the
                 kernel ops lower per backend (``kernels.active_lowering``):
@@ -39,12 +40,13 @@ import numpy as np
 
 import repro.core.graph as graph_mod
 import repro.placement.optimizer as optimizer_mod
+import repro.serve.estimator as estimator_mod
 from repro.core import CostModelConfig, GNNConfig, init_cost_model
 from repro.core.graph import build_graph_skeleton, query_static
-from repro.core.model import predict_placements
 from repro.dsps import WorkloadGenerator
 from repro.dsps.placement import Placement
 from repro.placement import PlacementOptimizer, sample_assignment_matrix
+from repro.serve.estimator import placed_predict
 
 METRICS = ("latency_p", "success", "backpressure")
 
@@ -77,10 +79,12 @@ class BuildCounter:
         graph_mod.build_graph = counted_single
         graph_mod.build_graph_batch = counted_batch
         graph_mod.build_a_place_batch = counted_place
-        # the optimizer imported the names directly; patch its module globals too
+        # the optimizer/estimator imported the names directly; patch their
+        # module globals too (scoring lives on the CostEstimator facade now)
         optimizer_mod.build_graph = counted_single
-        optimizer_mod.build_graph_batch = counted_batch
-        optimizer_mod.build_a_place_batch = counted_place
+        estimator_mod.build_graph = counted_single
+        estimator_mod.build_graph_batch = counted_batch
+        estimator_mod.build_a_place_batch = counted_place
         return self
 
     def uninstall(self):
@@ -88,8 +92,9 @@ class BuildCounter:
         graph_mod.build_graph_batch = self._orig_batch
         graph_mod.build_a_place_batch = self._orig_place
         optimizer_mod.build_graph = self._orig_single
-        optimizer_mod.build_graph_batch = self._orig_batch
-        optimizer_mod.build_a_place_batch = self._orig_place
+        estimator_mod.build_graph = self._orig_single
+        estimator_mod.build_graph_batch = self._orig_batch
+        estimator_mod.build_a_place_batch = self._orig_place
 
     @property
     def total(self) -> int:
@@ -140,7 +145,7 @@ def run(n_candidates: int, repeats: int, seed: int = 0) -> dict:
     def unfused_path():
         a_place = jnp.asarray(graph_mod.build_a_place_batch(q, c, a))
         return {
-            m: predict_placements(models_jnp[m][0], skel, a_place, static, models_jnp[m][1])
+            m: placed_predict(models_jnp[m][0], skel, a_place, static, models_jnp[m][1])
             for m in METRICS
         }
 

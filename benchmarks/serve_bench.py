@@ -1,0 +1,178 @@
+"""Serving microbenchmark: requests/s, one-at-a-time vs micro-batched.
+
+Drives ``repro.serve.PlacementService`` with a stream of small placement-
+scoring requests (the paper's online pattern: many concurrent "parallel
+COSTREAM instance" queries, each scoring a handful of candidates) in two
+submission modes over the SAME requests, models, and service code path:
+
+  serial     submit one request, wait for its result, submit the next —
+             queue depth never builds, so every request pays one full
+             dispatch (the fixed per-forward overhead dominates these small
+             graphs);
+  coalesced  submit the whole stream, then gather — requests pile up while
+             the worker is busy and get coalesced into a few fused
+             bucket-padded stacked forwards.
+
+Both modes are verified against direct ``CostEstimator.score`` answers
+before timing, and all bucket shapes the coalescer can produce are warmed
+up front, so the ratio isolates micro-batching — not compilation.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
+        [--min-speedup X]                      # coalesced/serial rps floor
+        [--baseline FILE --max-regression F]   # ratio gate vs recorded run
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import CostModelConfig, GNNConfig, init_cost_model
+from repro.core.bucketing import bucket_size
+from repro.dsps import WorkloadGenerator
+from repro.placement import sample_assignment_matrix
+from repro.serve import CostEstimator, PlacementService
+
+METRICS = ("latency_p", "success", "backpressure")
+
+
+def make_estimator(hidden: int = 32, n_ensemble: int = 2) -> CostEstimator:
+    models = {}
+    for i, metric in enumerate(METRICS):
+        cfg = CostModelConfig(metric=metric, n_ensemble=n_ensemble, gnn=GNNConfig(hidden=hidden))
+        models[metric] = (init_cost_model(jax.random.PRNGKey(i), cfg), cfg)
+    return CostEstimator(models)
+
+
+def run(n_requests: int, cands_per_request: int, repeats: int, seed: int = 0) -> dict:
+    repeats = max(1, repeats)
+    gen = WorkloadGenerator(seed=seed)
+    q = gen.query(kind="two_way", name="serve")
+    c = gen.cluster(6)
+    rng = np.random.default_rng(seed)
+    # request payloads may share candidates (realistic: hot queries repeat);
+    # cycle the distinct pool to fill n_requests x cands_per_request rows
+    pool = sample_assignment_matrix(
+        q, c, n_requests * cands_per_request, rng, max_tries_factor=400
+    )
+    assert len(pool) >= cands_per_request, "not enough distinct candidates"
+    idx = np.arange(n_requests * cands_per_request) % len(pool)
+    requests = [
+        pool[idx[i * cands_per_request : (i + 1) * cands_per_request]]
+        for i in range(n_requests)
+    ]
+
+    est = make_estimator()
+    # warm every bucket shape the coalescer can produce (powers of two from a
+    # single request up to the full stream), so timings exclude compilation
+    b = bucket_size(cands_per_request)
+    while True:
+        est.score(q, c, pool[np.arange(b) % len(pool)], METRICS)
+        if b >= bucket_size(n_requests * cands_per_request):
+            break
+        b *= 2
+
+    # correctness first: both submission modes must answer exactly like the
+    # shared facade, no matter how requests were batched
+    ref = [est.score(q, c, r, METRICS) for r in requests]
+    with PlacementService(est) as svc:
+        serial = [svc.score(q, c, r, METRICS) for r in requests]
+        futs = [svc.submit_score(q, c, r, METRICS) for r in requests]
+        coalesced = [f.result() for f in futs]
+    for name, got in (("serial", serial), ("coalesced", coalesced)):
+        for want, have in zip(ref, got):
+            for m in METRICS:
+                np.testing.assert_allclose(have[m], want[m], rtol=1e-5, atol=1e-6, err_msg=f"{name}:{m}")
+
+    # best-of-repeats: the gated quantity is a RATIO of two separately timed
+    # windows, so a transient container stall inside either window skews it;
+    # the per-mode minimum measures steady-state capability instead
+    timings = {}
+    forwards = {}
+    for mode in ("serial", "coalesced"):
+        best = np.inf
+        with PlacementService(est) as svc:
+            for _ in range(repeats):
+                svc.stats.reset()
+                t0 = time.perf_counter()
+                if mode == "serial":
+                    for r in requests:
+                        svc.score(q, c, r, METRICS)
+                else:
+                    futs = [svc.submit_score(q, c, r, METRICS) for r in requests]
+                    for f in futs:
+                        f.result()
+                best = min(best, time.perf_counter() - t0)
+            forwards[mode] = svc.stats.n_forwards  # last repeat's count
+        timings[mode] = best
+
+    rate = {m: n_requests / t for m, t in timings.items()}
+    return {
+        "n_requests": n_requests,
+        "cands_per_request": cands_per_request,
+        "n_metrics": len(METRICS),
+        "repeats": repeats,
+        "serial_s": round(timings["serial"], 4),
+        "coalesced_s": round(timings["coalesced"], 4),
+        "serial_rps": round(rate["serial"], 1),
+        "coalesced_rps": round(rate["coalesced"], 1),
+        "serial_forwards": forwards["serial"],
+        "coalesced_forwards": forwards["coalesced"],
+        "coalesced_vs_serial": round(rate["coalesced"] / rate["serial"], 2),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--cands", type=int, default=8, help="candidates per request")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true", help="small run for per-PR CI")
+    ap.add_argument("--min-speedup", type=float, default=None, help="fail below this")
+    ap.add_argument(
+        "--baseline",
+        type=str,
+        default=None,
+        help="JSON with a recorded coalesced_vs_serial ratio",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.10,
+        help="allowed fractional drop of the measured ratio below the baseline",
+    )
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.requests, args.repeats = 48, 3
+
+    res = run(args.requests, args.cands, args.repeats)
+    print(json.dumps(res, indent=2))
+    # not assert: these are the CI gate's invariants, they must survive python -O
+    if res["coalesced_forwards"] >= res["serial_forwards"]:
+        raise SystemExit(
+            "coalescing must issue fewer forwards than serial submission, got "
+            f"{res['coalesced_forwards']} vs {res['serial_forwards']}"
+        )
+    if args.min_speedup is not None and res["coalesced_vs_serial"] < args.min_speedup:
+        raise SystemExit(
+            f"coalescing speedup {res['coalesced_vs_serial']}x below required "
+            f"{args.min_speedup}x"
+        )
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        floor = base["coalesced_vs_serial"] * (1.0 - args.max_regression)
+        if res["coalesced_vs_serial"] < floor:
+            raise SystemExit(
+                f"coalesced_vs_serial ratio {res['coalesced_vs_serial']} regressed >"
+                f"{args.max_regression:.0%} below recorded baseline "
+                f"{base['coalesced_vs_serial']} (floor {floor:.3f})"
+            )
+
+
+if __name__ == "__main__":
+    main()

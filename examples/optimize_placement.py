@@ -1,58 +1,73 @@
 """End-to-end driver for the paper's use case: cost-based INITIAL operator
 placement (paper SV, Fig. 4).
 
-Trains small per-metric ensembles, then for a set of streaming queries:
-heuristic placement [32] vs. COSTREAM-optimized placement, with the
-simulator as ground truth. Reports the measured L_p speedups.
+Trains small per-metric ensembles, bundles them, then for a set of streaming
+queries runs heuristic placement [32] vs. COSTREAM-optimized placement
+through the CostEstimator facade, with the simulator as ground truth.
+Reports the measured L_p speedups.
 
-    PYTHONPATH=src python examples/optimize_placement.py
+    PYTHONPATH=src python examples/optimize_placement.py [--smoke]
+
+``--smoke`` shrinks corpus/epochs/queries to CI scale (scripts/ci.sh runs it
+so API drift in this example fails the gate instead of rotting silently).
 """
 
-import jax
+import argparse
+import time
+
 import numpy as np
 
-from repro.core import CostModelConfig, GNNConfig
-from repro.dsps import WorkloadGenerator, simulate
+from repro import CostEstimator, CostModelBundle, CostModelConfig, WorkloadGenerator
+from repro.core import GNNConfig
+from repro.dsps import simulate
 from repro.dsps.simulator import SimulatorConfig
-from repro.placement import PlacementOptimizer, heuristic_placement
+from repro.placement import heuristic_placement
 from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
 
 SIM = SimulatorConfig(noise_sigma=0.0)
 
 
-def train_models(traces):
+def train_bundle(traces, epochs: int, hidden: int) -> CostModelBundle:
     models = {}
     for metric in ("latency_p", "success", "backpressure"):
         ds = dataset_from_traces(traces, metric)
         tr, va, _ = split_dataset(ds)
-        cfg = CostModelConfig(metric=metric, n_ensemble=3, gnn=GNNConfig(hidden=48))
-        res = train_cost_model(tr, va, cfg, TrainConfig(epochs=8, batch_size=256))
+        cfg = CostModelConfig(metric=metric, n_ensemble=3, gnn=GNNConfig(hidden=hidden))
+        res = train_cost_model(tr, va, cfg, TrainConfig(epochs=epochs, batch_size=256))
         models[metric] = (res.params, cfg)
         print(f"trained {metric}: best val loss {res.best_val:.4f}")
-    return models
+    return CostModelBundle(models, meta={"epochs": epochs, "corpus": len(traces)})
 
 
-def main():
-    import time
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny corpus/epochs for CI")
+    args = ap.parse_args(argv)
+    n_corpus = 300 if args.smoke else 2000
+    epochs = 2 if args.smoke else 8
+    n_queries = 2 if args.smoke else 10
+    k = 16 if args.smoke else 48
+    refine = 1 if args.smoke else 2
 
     gen = WorkloadGenerator(seed=1)
     print("generating training corpus...")
-    models = train_models(gen.corpus(2000))
-    optimizer = PlacementOptimizer(models)
+    bundle = train_bundle(gen.corpus(n_corpus), epochs, hidden=32 if args.smoke else 48)
+    estimator = CostEstimator.from_bundle(bundle)
 
     rng = np.random.default_rng(0)
     speedups = []
     scored = 0
     t0 = time.perf_counter()
-    for i in range(10):
+    for i in range(n_queries):
         q = gen.query(name=f"demo{i}")
         cluster = gen.cluster(6)
         base = heuristic_placement(q, cluster)
         base_lat = simulate(q, cluster, base, SIM).latency_p
 
         # vectorized sample -> batched multi-metric scoring -> hill-climb
-        # refinement of the top candidates (docs/placement_search.md)
-        res = optimizer.optimize(q, cluster, "latency_p", k=48, rng=rng, refine_rounds=2)
+        # refinement of the top candidates (docs/placement_search.md), all
+        # behind the facade's one-call search entry point
+        res = estimator.optimize(q, cluster, "latency_p", k=k, rng=rng, refine_rounds=refine)
         scored += res.n_candidates
         opt_lat = simulate(q, cluster, res.placement, SIM).latency_p
         speedups.append(base_lat / max(opt_lat, 1e-9))

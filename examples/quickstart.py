@@ -1,23 +1,36 @@
 """Quickstart: generate a workload corpus, train a COSTREAM latency model,
-and predict the cost of an unseen placed query.
+save it as a versioned CostModelBundle, and serve predictions for unseen
+placed queries through the CostEstimator facade.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` shrinks corpus/epochs to CI scale (scripts/ci.sh runs it so API
+drift in this example fails the gate instead of rotting silently).
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import argparse
+import os
+import tempfile
 
-from repro.core import CostModelConfig, GNNConfig, predict, qerror_summary
-from repro.dsps import WorkloadGenerator
+from repro import CostEstimator, CostModelBundle, CostModelConfig, WorkloadGenerator
+from repro.core import GNNConfig, qerror_summary
 from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny corpus/epochs for CI")
+    ap.add_argument("--corpus", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=None)
+    args = ap.parse_args(argv)
+    n_corpus = args.corpus or (160 if args.smoke else 1500)
+    epochs = args.epochs or (2 if args.smoke else 10)
+    hidden = 24 if args.smoke else 48
+
     # 1. benchmark corpus (paper SVI): random queries x hardware x placements,
     #    labeled by the DSPS cost simulator
     gen = WorkloadGenerator(seed=0)
-    traces = gen.corpus(1500)
+    traces = gen.corpus(n_corpus)
     print(f"corpus: {len(traces)} traces, "
           f"{sum(t.labels.backpressure == 0 for t in traces)} backpressured, "
           f"{sum(t.labels.success == 0 for t in traces)} failed")
@@ -25,14 +38,26 @@ def main():
     # 2. train a processing-latency cost model (ensemble of 2 for speed)
     ds = dataset_from_traces(traces, "latency_p")
     train, val, test = split_dataset(ds)
-    cfg = CostModelConfig(metric="latency_p", n_ensemble=2, gnn=GNNConfig(hidden=48))
+    cfg = CostModelConfig(metric="latency_p", n_ensemble=2, gnn=GNNConfig(hidden=hidden))
     result = train_cost_model(
-        train, val, cfg, TrainConfig(epochs=10, batch_size=256, verbose=True)
+        train, val, cfg, TrainConfig(epochs=epochs, batch_size=256, verbose=not args.smoke)
     )
 
-    # 3. zero-shot predictions on unseen placed queries
-    g = jax.tree_util.tree_map(jnp.asarray, test.graphs)
-    pred = predict(result.params, g, cfg)
+    # 3. package the trained ensemble as the ONE versioned serving artifact
+    #    and round-trip it through disk — exactly what a deployment loads
+    bundle = CostModelBundle(
+        models={"latency_p": (result.params, cfg)},
+        meta={"corpus": n_corpus, "epochs": epochs, "best_val": result.best_val},
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "latency_bundle")
+        bundle.save(path)
+        served = CostModelBundle.load(path)
+    print(f"bundle round-trip: metrics={served.metrics} meta={served.meta}")
+
+    # 4. zero-shot predictions on unseen placed queries via the facade
+    est = CostEstimator.from_bundle(served)
+    pred = est.estimate(test.graphs, metrics=["latency_p"])["latency_p"]
     print("\nq-error on held-out queries:", qerror_summary(test.labels, pred))
     for i in range(3):
         print(f"  query {i}: true {test.labels[i]:9.1f} ms   predicted {pred[i]:9.1f} ms")

@@ -21,3 +21,15 @@ echo "== training step perf (quick) =="
 # path at batch 256 and must not regress >10% below the recorded baseline
 python benchmarks/training_bench.py --quick --min-speedup 1.5 \
   --baseline benchmarks/baselines/training_bench_quick.json --max-regression 0.10
+
+echo "== serving micro-batch perf (quick) =="
+# PlacementService coalescing must stay >= 2x one-request-at-a-time
+# submission and must not regress >10% below the recorded baseline
+python benchmarks/serve_bench.py --quick --min-speedup 2 \
+  --baseline benchmarks/baselines/serve_bench_quick.json --max-regression 0.10
+
+echo "== examples smoke (API drift gate) =="
+# the examples exercise the public train->bundle->serve surface end to end;
+# tiny corpus/epoch settings via --smoke
+python examples/quickstart.py --smoke
+python examples/optimize_placement.py --smoke

@@ -1,0 +1,35 @@
+"""COSTREAM reproduction: learned cost models for operator placement in
+edge-cloud environments (arXiv 2403.08444), grown into a JAX/Pallas serving
+system.
+
+``import repro`` exposes the stable surface — train a model, bundle it, serve
+it (docs/api.md):
+
+    WorkloadGenerator   corpus of (query, cluster, placement, labels) traces
+    CostModelConfig     per-metric GNN ensemble configuration
+    CostModelBundle     versioned on-disk artifact of all trained ensembles
+    CostEstimator       the single inference facade (estimate/score/optimize)
+    PlacementService    micro-batching front-end for concurrent requests
+    PlacementOptimizer  search strategy layer (sample -> score -> refine)
+
+Deeper layers (``repro.core`` engine, ``repro.dsps`` substrate,
+``repro.training`` loops, ``repro.kernels`` Pallas kernels) remain importable
+directly but are not version-stable.
+"""
+
+__version__ = "0.5.0"
+
+from repro.core.model import CostModelConfig
+from repro.dsps.generator import WorkloadGenerator
+from repro.serve import CostEstimator, CostModelBundle, PlacementService
+from repro.placement.optimizer import PlacementOptimizer
+
+__all__ = [
+    "CostEstimator",
+    "CostModelBundle",
+    "CostModelConfig",
+    "PlacementOptimizer",
+    "PlacementService",
+    "WorkloadGenerator",
+    "__version__",
+]

@@ -10,7 +10,8 @@ as SIV-A prescribes.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import warnings
+from dataclasses import dataclass
 from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -18,12 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import nn
-from repro.kernels import active_lowering
 from repro.core.gnn import (
     GNNConfig,
     apply_gnn_batch,
-    apply_gnn_placed,
-    apply_gnn_placed_stacked,
     apply_gnn_stacked,
     apply_gnn_traditional,
     init_gnn,
@@ -117,20 +115,7 @@ def ensemble_loss(
     return jnp.sum(per_member)
 
 
-# -- inference --------------------------------------------------------------------
-
-
-from functools import lru_cache
-
-
-# every cached factory below takes the kernels' active lowering as part of
-# its key: the lowering is read at trace time, so without it a flipped
-# REPRO_PALLAS_INTERPRET after the first call would silently reuse stale traces
-
-
-@lru_cache(maxsize=64)
-def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
-    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+# -- inference voting -------------------------------------------------------------
 
 
 def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
@@ -143,12 +128,6 @@ def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
         return np.mean(np.expm1(raw), axis=0).clip(min=0.0)
     votes = (raw > 0.0).astype(np.int64)  # logit > 0 <=> p > 0.5
     return (votes.sum(axis=0) * 2 > votes.shape[0]).astype(np.int64)
-
-
-def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
-    """Ensemble prediction in *cost space* for a batch of graphs."""
-    raw = _jitted_forward(cfg, active_lowering())(params, g)
-    return _ensemble_vote(np.asarray(raw), cfg)
 
 
 # -- fused multi-metric ensembles -------------------------------------------------
@@ -219,97 +198,75 @@ def _split_votes(raw: np.ndarray, stacked: StackedEnsembles) -> Dict[str, np.nda
     return out
 
 
-@lru_cache(maxsize=64)
-def _jitted_forward_stacked(gnn: GNNConfig, traditional_mp: bool, lowering: str = "ref"):
-    # metric only selects the loss/vote, never the forward; any metric works
-    cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
-    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+def label_array(traces, metric: str) -> np.ndarray:
+    return np.asarray([t.labels.as_dict()[metric] for t in traces], dtype=np.float32)
 
 
-@lru_cache(maxsize=256)
-def _jitted_placed_forward_stacked(
-    gnn: GNNConfig, static: QueryStatic, n_hw: int, lowering: str = "ref"
-):
-    def f(p, skel, a_place):
-        return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw)
+# -- deprecated inference entry points --------------------------------------------
+#
+# The serving API moved behind ``repro.serve.CostEstimator`` (docs/api.md):
+# the facade owns the skeleton/stack caches and the jitted-forward trace
+# caches that used to live at this module's level.  The wrappers below keep
+# the old call signatures alive for out-of-tree users: each delegates to the
+# SAME serving machinery (shim output == facade output, test-pinned) and
+# warns ONCE per process.  Removal horizon: docs/api.md#deprecations.
 
-    return jax.jit(f)
+_DEPRECATION_WARNED: set = set()
 
 
-def predict_placements_fused(
-    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
-) -> Dict[str, np.ndarray]:
-    """All metrics' ensembles over one query's candidate placements, fused.
-
-    One jitted ``apply_gnn_placed_stacked`` call evaluates every (metric,
-    member) pair in a single launch per GNN stage, on the trimmed active-slot
-    layout; the raw ``(sum_E, B)`` block is then split back per metric and
-    voted exactly like ``predict_placements`` (the stacked-vs-loop
-    equivalence test pins this to float tolerance).
-    """
-    assert not stacked.cfgs[0].traditional_mp, "use predict() for traditional_mp models"
-    n_hw = int(np.asarray(skel.hw_mask).sum())
-    fwd = _jitted_placed_forward_stacked(
-        stacked.cfgs[0].gnn, static, n_hw, active_lowering()
+def _warn_deprecated(name: str, replacement: str) -> None:
+    if name in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(name)
+    warnings.warn(
+        f"repro.core.model.{name} is deprecated; use {replacement} "
+        "(docs/api.md#deprecations)",
+        DeprecationWarning,
+        stacklevel=3,
     )
-    return _split_votes(np.asarray(fwd(stacked.params, skel, a_place)), stacked)
 
 
-@lru_cache(maxsize=256)
-def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: str = "ref"):
-    def f(p, skel, a_place):
-        return jax.vmap(lambda pp: apply_gnn_placed(pp, skel, a_place, static, cfg.gnn)[..., 0])(p)
+def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Deprecated: use ``repro.serve.CostEstimator.estimate``."""
+    _warn_deprecated("predict", "repro.serve.CostEstimator.estimate")
+    from repro.serve import estimator as _serve
 
-    return jax.jit(f)
+    return _serve.ensemble_predict(params, g, cfg)
 
 
-def predict_placements(
-    params, skel: JointGraph, a_place: jax.Array, static: QueryStatic, cfg: CostModelConfig
-) -> np.ndarray:
-    """Ensemble prediction over candidate placements of ONE query.
+def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Deprecated: use ``repro.serve.CostEstimator.proba``."""
+    _warn_deprecated("predict_proba", "repro.serve.CostEstimator.proba")
+    from repro.serve import estimator as _serve
 
-    ``skel`` is the shared unbatched skeleton, ``a_place`` the ``(B, O, W)``
-    placement adjacencies.  Numerically equivalent to ``predict`` on the
-    broadcast batch, via the query-specialized forward (jit-cached per
-    (config, query-structure) pair).  Not available for ``traditional_mp``
-    ablation models — those don't have the 3-stage structure the
-    specialization exploits; callers fall back to ``predict``.
-    """
-    assert not cfg.traditional_mp, "use predict() for traditional_mp models"
-    fwd = _jitted_placed_forward(cfg, static, active_lowering())
-    return _ensemble_vote(np.asarray(fwd(params, skel, a_place)), cfg)
+    return _serve.ensemble_proba(params, g, cfg)
 
 
 def predict_metrics(
     models: Dict[str, Tuple[object, CostModelConfig]], g: JointGraph
 ) -> Dict[str, np.ndarray]:
-    """Score ONE shared graph batch with several per-metric ensembles.
+    """Deprecated: use ``repro.serve.CostEstimator.estimate``."""
+    _warn_deprecated("predict_metrics", "repro.serve.CostEstimator.estimate")
+    from repro.serve import CostEstimator
 
-    The generic multi-metric path: ``g`` is transferred to the device once and
-    every requested ensemble (target + success/backpressure filters) runs over
-    the same resident batch.  When the per-metric GNN configs are
-    shape-identical (the COSTREAM default — same architecture, different
-    training targets) the ensembles are additionally fused into ONE stacked
-    vmapped forward (see ``stack_metric_models``): a single launch per GNN
-    stage instead of one forward per (metric, member).  Heterogeneous configs
-    fall back to a per-metric loop over the shared batch.
-    """
-    g = jax.tree_util.tree_map(jnp.asarray, g)
-    try:
-        stacked = stack_metric_models(models)
-    except ValueError:  # mixed architectures: per-metric forwards, shared batch
-        return {m: predict(params, g, cfg) for m, (params, cfg) in models.items()}
-    fwd = _jitted_forward_stacked(
-        stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, active_lowering()
-    )
-    return _split_votes(np.asarray(fwd(stacked.params, g)), stacked)
+    return CostEstimator(models).estimate(g)
 
 
-def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
-    raw = np.asarray(_jitted_forward(cfg)(params, g))
-    assert cfg.task == "classification"
-    return 1.0 / (1.0 + np.exp(-raw)).mean(axis=0)
+def predict_placements(
+    params, skel: JointGraph, a_place: jax.Array, static: QueryStatic, cfg: CostModelConfig
+) -> np.ndarray:
+    """Deprecated: use ``repro.serve.CostEstimator.score``."""
+    _warn_deprecated("predict_placements", "repro.serve.CostEstimator.score")
+    from repro.serve import estimator as _serve
+
+    return _serve.placed_predict(params, skel, a_place, static, cfg)
 
 
-def label_array(traces, metric: str) -> np.ndarray:
-    return np.asarray([t.labels.as_dict()[metric] for t in traces], dtype=np.float32)
+def predict_placements_fused(
+    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
+) -> Dict[str, np.ndarray]:
+    """Deprecated: use ``repro.serve.CostEstimator.score``."""
+    _warn_deprecated("predict_placements_fused", "repro.serve.CostEstimator.score")
+    from repro.serve import estimator as _serve
+
+    return _serve.placed_predict_fused(stacked, skel, a_place, static)

@@ -79,3 +79,25 @@ def load_flat_model(name: str) -> Tuple[object, FlatVectorConfig]:
 
 def exists(kind: str, name: str) -> bool:
     return os.path.exists(path(kind, name, "latest"))
+
+
+# -- serving bundles (repro.serve.bundle) ------------------------------------------
+#
+# The serving path loads ONE versioned bundle holding every metric ensemble
+# (docs/api.md#bundle-format) instead of five loose per-metric checkpoints;
+# the per-metric save_cost_model/load_cost_model files above remain the
+# resumable per-stage training artifacts the bundle is assembled from.
+
+
+def save_bundle(name: str, bundle) -> str:
+    return bundle.save(path("bundles", name))
+
+
+def load_bundle(name: str):
+    from repro.serve.bundle import CostModelBundle
+
+    return CostModelBundle.load(path("bundles", name))
+
+
+def bundle_exists(name: str) -> bool:
+    return exists("bundles", name)

@@ -110,6 +110,34 @@ def stage_main(epochs: int):
     traces = main_corpus()
     for metric in ALL_METRICS:
         _train_one(traces, metric, f"main_{metric}", n_ensemble=3, epochs=epochs)
+    export_main_bundle(epochs)
+
+
+def export_main_bundle(epochs: int):
+    """Assemble the five per-metric ensembles into the ONE versioned serving
+    artifact (repro.serve.CostModelBundle) the online path loads; the loose
+    per-metric checkpoints stay as the resumable training artifacts."""
+    from repro.serve.bundle import CostModelBundle
+
+    if artifacts.bundle_exists("main"):
+        print("[skip] bundle main")
+        return
+    missing = [m for m in ALL_METRICS if not artifacts.exists("costream", f"main_{m}")]
+    if missing:
+        print(f"[warn] bundle main not exported: metrics not trained yet {missing}")
+        return
+    bundle = CostModelBundle(
+        models={m: artifacts.load_cost_model(f"main_{m}") for m in ALL_METRICS},
+        meta={
+            "stage": "main",
+            "corpus_seed": CORPUS_SEED,
+            "split_seed": SPLIT_SEED,
+            "corpus_size": MAIN_CORPUS,
+            "epochs": epochs,
+        },
+    )
+    artifacts.save_bundle("main", bundle)
+    print(f"[done] bundle main ({', '.join(bundle.metrics)})")
 
 
 def stage_flat(epochs: int):

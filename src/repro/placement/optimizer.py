@@ -6,49 +6,30 @@ Vectorized single-materialization search pipeline:
 
 1. ``sample_assignment_matrix`` draws the candidate set as an ``(N, n_ops)``
    matrix with batched rule checks (no per-candidate Python loop).
-2. ``build_graph_batch`` materializes the padded ``JointGraph`` batch in one
-   pass — query/cluster features are placement-invariant, only ``a_place``
-   varies per candidate.
-3. ``predict_metrics`` runs ALL requested metric ensembles (target +
-   success/backpressure feasibility filters) over the same device-resident
-   batch, padded to power-of-two buckets so the jitted forwards never retrace
-   per candidate count (the TPU-native analogue of the paper's "parallel
-   COSTREAM instances").
-4. An optional hill-climb refinement loop mutates the top-k candidates and
+2. Scoring goes through the shared ``CostEstimator`` facade
+   (``repro.serve.estimator``): skeleton built once per (query, cluster)
+   pair (LRU-amortized across calls), ALL requested metric ensembles fused
+   into one bucket-padded stacked forward per batch — the TPU-native
+   analogue of the paper's "parallel COSTREAM instances".
+3. An optional hill-climb refinement loop mutates the top-k candidates and
    re-scores the children through the same batched path, so search quality
    scales with compute instead of with the initial sample's luck.
+
+Since the serving redesign (docs/api.md) this class is a thin *search
+strategy* layer: all model state, caches, and forwards live on the
+estimator; the optimizer contributes candidate sampling, the feasibility
+filter, and the refinement loop.
 """
 
 from __future__ import annotations
 
-from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import (
-    JointGraph,
-    batch_graphs,
-    bucket_size,
-    build_a_place_batch,
-    build_graph,
-    build_graph_batch,
-    build_graph_skeleton,
-    pad_batch,
-    query_static,
-    skeleton_cache_key,
-)
-from repro.core.model import (
-    CostModelConfig,
-    predict,
-    predict_metrics,
-    predict_placements,
-    predict_placements_fused,
-    stack_metric_models,
-)
+from repro.core.graph import batch_graphs, bucket_size, build_graph
+from repro.core.model import CostModelConfig
 from repro.dsps.hardware import Cluster
 from repro.dsps.placement import Placement
 from repro.dsps.query import Query
@@ -57,6 +38,7 @@ from repro.placement.enumerate import (
     mutate_assignments,
     sample_assignment_matrix,
 )
+from repro.serve.estimator import CostEstimator
 
 
 @dataclass
@@ -70,53 +52,28 @@ class OptimizerResult:
 
 
 class PlacementOptimizer:
-    """Holds trained per-metric ensembles and selects initial placements.
+    """Selects initial placements by scoring candidates with a CostEstimator.
 
-    ``models``: dict metric -> (params, CostModelConfig). Requires the target
-    metric plus (when available) "success" and "backpressure" for the sanity
-    filter; missing filters degrade gracefully (paper's procedure needs them,
-    our ablations can disable them).
-
-    Per-(query, cluster) state — the featurized skeleton, its device
-    transfer, and the trace-time ``QueryStatic`` — is cached across
-    ``optimize``/``score_assignments`` calls (keyed structurally via
-    ``skeleton_cache_key``, LRU-bounded by ``skeleton_cache_size``): the
-    online-monitoring pattern re-scores the same query every round, and
-    rebuilding the skeleton per call was pure waste.  The per-metric
-    ensembles are fused into one stacked forward per scoring call when their
-    configs are shape-identical (``stack_metric_models``); heterogeneous
-    configs fall back to the per-metric loop.
+    Construct from a metric -> (params, CostModelConfig) dict (the legacy
+    shape), an existing ``CostEstimator`` (shares its caches), or a saved
+    bundle via ``from_bundle``.  Requires the target metric plus (when
+    available) "success" and "backpressure" for the sanity filter; missing
+    filters degrade gracefully (the paper's procedure needs them, our
+    ablations can disable them).
     """
 
-    skeleton_cache_size = 64  # (query, cluster) pairs kept device-resident
+    def __init__(self, models):
+        self.estimator = (
+            models if isinstance(models, CostEstimator) else CostEstimator(models)
+        )
 
-    def __init__(self, models: Dict[str, Tuple[object, CostModelConfig]]):
-        self.models = models
-        self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, object]]" = OrderedDict()
-        self._stacked: Dict[Tuple[str, ...], object] = {}
+    @classmethod
+    def from_bundle(cls, bundle) -> "PlacementOptimizer":
+        return cls(CostEstimator.from_bundle(bundle))
 
-    def _skeleton_for(self, query: Query, cluster: Cluster):
-        """Cached (device-resident skeleton, QueryStatic) for one pair."""
-        key = skeleton_cache_key(query, cluster)
-        hit = self._skeletons.get(key)
-        if hit is not None:
-            self._skeletons.move_to_end(key)
-            return hit
-        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(query, cluster))
-        entry = (skel, query_static(query))
-        self._skeletons[key] = entry
-        while len(self._skeletons) > self.skeleton_cache_size:
-            self._skeletons.popitem(last=False)
-        return entry
-
-    def _stacked_for(self, metrics: Tuple[str, ...]):
-        """Fused ensemble stack for ``metrics``, or None if not fusable."""
-        if metrics not in self._stacked:
-            try:
-                self._stacked[metrics] = stack_metric_models(self.models, metrics)
-            except ValueError:  # heterogeneous per-metric configs
-                self._stacked[metrics] = None
-        return self._stacked[metrics]
+    @property
+    def models(self) -> Dict[str, Tuple[object, CostModelConfig]]:
+        return self.estimator.models
 
     def score_candidates(
         self, query: Query, cluster: Cluster, candidates: List[Placement], metric: str
@@ -124,16 +81,14 @@ class PlacementOptimizer:
         """Legacy per-metric path: rebuilds the graph batch on every call.
 
         Kept as the reference implementation (and the benchmark baseline);
-        prefer ``score_assignments`` which builds once for all metrics.
+        prefer ``score_assignments`` / ``CostEstimator.score`` which build
+        once for all metrics.
         """
-        params, cfg = self.models[metric]
         singles = [build_graph(query, cluster, p) for p in candidates]
         # pad to a shape bucket so the jitted scorer doesn't retrace per count
         n = len(singles)
         singles = singles + [singles[-1]] * (bucket_size(n) - n)
-        graphs = batch_graphs(singles)
-        graphs = jax.tree_util.tree_map(jnp.asarray, graphs)
-        return predict(params, graphs, cfg)[:n]
+        return self.estimator.estimate(batch_graphs(singles), [metric])[metric][:n]
 
     def score_assignments(
         self,
@@ -144,59 +99,10 @@ class PlacementOptimizer:
     ) -> Dict[str, np.ndarray]:
         """Fast path: build the candidate batch ONCE, score every metric on it.
 
-        Returns metric -> ``(N,)`` predictions.  The batch is padded to the
-        enclosing power-of-two bucket (see docs/placement_search.md) and the
-        padding rows sliced off, so results are independent of the bucket.
+        Delegates to ``CostEstimator.score`` (docs/api.md); returns metric ->
+        ``(N,)`` predictions, bucket- and batchmate-independent.
         """
-        return self._make_scorer(query, cluster, list(metrics))(
-            np.asarray(assignments, dtype=np.int64)
-        )
-
-    def _make_scorer(self, query: Query, cluster: Cluster, metrics: Sequence[str]):
-        """Scoring closure with the per-(query, cluster) work hoisted out.
-
-        The refinement loop re-scores new candidates every round, and repeated
-        ``optimize`` calls re-score the same query; the skeleton, its device
-        transfer, and the trace-time ``QueryStatic`` are identical throughout,
-        so they come from the instance-level cache (``_skeleton_for``).
-        """
-        metrics = tuple(metrics)
-        if any(self.models[m][1].traditional_mp for m in metrics):
-            # ablation models lack the 3-stage structure the specialized
-            # forward exploits; build the full broadcast batch instead
-            def score_generic(assignments: np.ndarray) -> Dict[str, np.ndarray]:
-                n = len(assignments)
-                assert n > 0, "no candidates to score"
-                graphs = pad_batch(
-                    build_graph_batch(query, cluster, assignments), bucket_size(n)
-                )
-                scored = predict_metrics({m: self.models[m] for m in metrics}, graphs)
-                return {m: v[:n] for m, v in scored.items()}
-
-            return score_generic
-
-        skel, static = self._skeleton_for(query, cluster)
-        stacked = self._stacked_for(metrics)
-
-        def score(assignments: np.ndarray) -> Dict[str, np.ndarray]:
-            n = len(assignments)
-            assert n > 0, "no candidates to score"
-            a_place = build_a_place_batch(query, cluster, assignments)
-            pad = bucket_size(n) - n
-            if pad:
-                a_place = np.concatenate([a_place, np.repeat(a_place[-1:], pad, axis=0)])
-            a_place = jnp.asarray(a_place)
-            if stacked is not None:
-                scored = predict_placements_fused(stacked, skel, a_place, static)
-                return {m: v[:n] for m, v in scored.items()}
-            return {
-                m: predict_placements(
-                    self.models[m][0], skel, a_place, static, self.models[m][1]
-                )[:n]
-                for m in metrics
-            }
-
-        return score
+        return self.estimator.score(query, cluster, assignments, metrics)
 
     @staticmethod
     def _feasible_mask(
@@ -239,7 +145,7 @@ class PlacementOptimizer:
         )
         metrics = [target_metric] + [m for m in filter_metrics if m != target_metric]
         if type(self).score_assignments is PlacementOptimizer.score_assignments:
-            score = self._make_scorer(query, cluster, metrics)
+            score = self.estimator.scorer(query, cluster, metrics)
         else:
             # subclass supplies its own scoring (e.g. a simulator oracle in
             # tests); honor the override instead of the hoisted fast path

@@ -1,0 +1,34 @@
+"""Serving subsystem: train once offline, answer many queries online.
+
+The stable online API (docs/api.md) is three objects:
+
+* ``CostModelBundle`` — the versioned on-disk artifact holding every trained
+  metric ensemble + configs + training metadata (one save/load round-trip);
+* ``CostEstimator``   — the single inference facade (``estimate`` / ``score``
+  / ``optimize``) constructed from a bundle, owning all serving caches;
+* ``PlacementService`` — the micro-batching front-end that coalesces
+  concurrent requests into fused bucket-padded forwards.
+"""
+
+from repro.serve.bundle import (
+    BUNDLE_SCHEMA_VERSION,
+    BundleVersionError,
+    CostModelBundle,
+    bundle_from_checkpoint,
+    layout_descriptor,
+    merge_bundles,
+)
+from repro.serve.estimator import CostEstimator
+from repro.serve.service import PlacementService, ServiceStats
+
+__all__ = [
+    "BUNDLE_SCHEMA_VERSION",
+    "BundleVersionError",
+    "CostModelBundle",
+    "CostEstimator",
+    "PlacementService",
+    "ServiceStats",
+    "bundle_from_checkpoint",
+    "layout_descriptor",
+    "merge_bundles",
+]

@@ -1,0 +1,227 @@
+"""Versioned on-disk bundle of trained COSTREAM cost models.
+
+A ``CostModelBundle`` is the ONE serving artifact: every trained metric
+ensemble of a deployment — the regression targets (latency/throughput) plus
+the success/backpressure feasibility filters — together with their
+``CostModelConfig``s and training metadata, in a single directory:
+
+    <dir>/step_0000000000/arrays.npz     every metric's stacked ensemble params
+    <dir>/step_0000000000/manifest.json  schema + layout versions, configs, meta
+    <dir>/latest                         pointer (atomic-write protocol)
+
+Bundles are written with the atomic checkpoint writer
+(``training/checkpoint.py``), so a crash mid-save never corrupts a served
+bundle.  One ``save``/``load`` round-trip replaces the five loose per-metric
+checkpoint directories the training driver used to emit.
+
+The manifest pins two compatibility contracts, checked on ``load``:
+
+* ``schema_version`` — the bundle format itself (``BUNDLE_SCHEMA_VERSION``);
+* ``layout`` — the depth-major canonical slot layout the params were trained
+  against (``graph.SLOT_RANGES`` + pad sizes, the PR-3 engine contract).
+  Ensemble weights are row-position-dependent, so serving them under a
+  different layout would silently mis-predict; ``load`` refuses with a
+  ``BundleVersionError`` instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.gnn import GNNConfig
+from repro.core.graph import MAX_DEPTH, MAX_HW, MAX_OPS, SLOT_RANGES
+from repro.core.model import CostModelConfig, init_cost_model
+from repro.training.checkpoint import (
+    SEP,
+    _path_str,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+BUNDLE_SCHEMA_VERSION = 1
+
+
+def layout_descriptor() -> Dict:
+    """The slot-layout contract bundles are pinned to (JSON-normalized)."""
+    return {
+        "slot_ranges": [list(r) for r in SLOT_RANGES],
+        "max_ops": MAX_OPS,
+        "max_hw": MAX_HW,
+        "max_depth": MAX_DEPTH,
+    }
+
+
+class BundleVersionError(RuntimeError):
+    """The bundle's schema or slot layout is incompatible with this build."""
+
+
+def _config_to_manifest(cfg: CostModelConfig) -> Dict:
+    return {
+        "metric": cfg.metric,
+        "n_ensemble": cfg.n_ensemble,
+        "traditional_mp": cfg.traditional_mp,
+        "gnn": dataclasses.asdict(cfg.gnn),
+    }
+
+
+def _config_from_manifest(spec: Dict) -> CostModelConfig:
+    return CostModelConfig(
+        metric=spec["metric"],
+        n_ensemble=spec["n_ensemble"],
+        traditional_mp=spec.get("traditional_mp", False),
+        gnn=GNNConfig(**spec["gnn"]),
+    )
+
+
+@dataclass
+class CostModelBundle:
+    """All trained metric ensembles of one deployment + their configs + meta.
+
+    ``models``: metric name -> (ensemble params pytree, CostModelConfig) —
+    the exact dict shape ``CostEstimator`` and ``PlacementOptimizer`` consume.
+    ``meta``: free-form training provenance (corpus seeds, epochs, val
+    losses); persisted verbatim in the manifest.
+    """
+
+    models: Dict[str, Tuple[object, CostModelConfig]]
+    meta: Dict = field(default_factory=dict)
+
+    @property
+    def metrics(self) -> Tuple[str, ...]:
+        return tuple(self.models)
+
+    def config(self, metric: str) -> CostModelConfig:
+        return self.models[metric][1]
+
+    def params(self, metric: str):
+        return self.models[metric][0]
+
+    def save(self, directory: str) -> str:
+        """Atomically persist the bundle; returns the written step directory."""
+        assert self.models, "refusing to save an empty bundle"
+        state = {m: params for m, (params, _) in self.models.items()}
+        manifest = {
+            "schema_version": BUNDLE_SCHEMA_VERSION,
+            "layout": layout_descriptor(),
+            "configs": {m: _config_to_manifest(cfg) for m, (_, cfg) in self.models.items()},
+            "meta": self.meta,
+        }
+        return save_checkpoint(directory, 0, state, extra=manifest, keep=1)
+
+    @classmethod
+    def load(cls, directory: str) -> "CostModelBundle":
+        """Load a bundle, refusing incompatible schema/layout versions."""
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no bundle under {directory}")
+        step_dir = os.path.join(directory, f"step_{step:010d}")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            manifest = json.load(f)["extra"]
+        _check_compatible(manifest, directory)
+        cfgs = {m: _config_from_manifest(spec) for m, spec in manifest["configs"].items()}
+        like = {m: init_cost_model(jax.random.PRNGKey(0), cfg) for m, cfg in cfgs.items()}
+        state, _, _ = restore_checkpoint(directory, like, step=step)
+        assert state is not None, f"bundle manifest without arrays under {directory}"
+        return cls(
+            models={m: (state[m], cfgs[m]) for m in cfgs},
+            meta=manifest.get("meta", {}),
+        )
+
+
+def _check_compatible(manifest: Dict, directory: str) -> None:
+    got = manifest.get("schema_version")
+    if got != BUNDLE_SCHEMA_VERSION:
+        raise BundleVersionError(
+            f"bundle at {directory} has schema_version={got!r}, but this build "
+            f"reads v{BUNDLE_SCHEMA_VERSION}; re-export the bundle with a "
+            "matching repro version (see docs/api.md#bundle-format)"
+        )
+    layout = manifest.get("layout")
+    if layout != layout_descriptor():
+        raise BundleVersionError(
+            f"bundle at {directory} was trained against a different canonical "
+            f"slot layout ({layout!r} vs {layout_descriptor()!r}); ensemble "
+            "weights are row-position-dependent, so serving them under this "
+            "build's depth-major layout would silently mis-predict — retrain "
+            "or convert the bundle (docs/api.md#bundle-format)"
+        )
+
+
+def bundle_from_checkpoint(
+    ckpt_dir: str, cfg: CostModelConfig, meta: Optional[Dict] = None
+) -> CostModelBundle:
+    """Export a ``train_cost_model`` checkpoint as a single-metric bundle.
+
+    Training checkpoints persist the full step state ``(params, opt_state,
+    ef)``; only the params (tuple element 0) belong in a serving bundle, so
+    this reads the ``0/``-prefixed leaves of the newest step directly instead
+    of reconstructing the optimizer/error-feedback trees just to discard
+    them.  Combine the returned bundles of several metrics via
+    ``merge_bundles`` before serving.
+    """
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no training checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(step_dir, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files if k.startswith("0" + SEP)}
+    like = init_cost_model(jax.random.PRNGKey(0), cfg)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for pth, leaf in leaves_with_paths:
+        key = "0" + SEP + SEP.join(_path_str(p) for p in pth)
+        if key not in arrays:
+            raise KeyError(
+                f"checkpoint at {ckpt_dir} lacks params leaf {key}; was it "
+                "written by train_cost_model (state = (params, opt_state, ef))?"
+            )
+        arr = arrays[key]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(
+                f"params shape mismatch for {key}: checkpoint {arr.shape} vs "
+                f"config {want.shape} — wrong CostModelConfig for this checkpoint"
+            )
+        new_leaves.append(arr.astype(want.dtype))
+    params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return CostModelBundle(
+        models={cfg.metric: (params, cfg)},
+        meta={"exported_from": os.path.abspath(ckpt_dir), "step": int(step), **(meta or {})},
+    )
+
+
+def merge_bundles(*bundles: CostModelBundle) -> CostModelBundle:
+    """Union of several bundles' models (later bundles win on metric clash).
+
+    Meta keys agreeing across bundles merge flat; keys carrying *different*
+    values (e.g. every ``bundle_from_checkpoint`` export has its own
+    ``exported_from``/``step``) are namespaced per source bundle as
+    ``"<metrics>/<key>"``, so no metric's provenance is silently overwritten
+    by another's.
+    """
+    models: Dict[str, Tuple[object, CostModelConfig]] = {}
+    for b in bundles:
+        models.update(b.models)
+    first: Dict = {}
+    conflicts = set()
+    for b in bundles:
+        for k, v in b.meta.items():
+            if k in first and first[k] != v:
+                conflicts.add(k)
+            first.setdefault(k, v)
+    meta = {k: v for k, v in first.items() if k not in conflicts}
+    for b in bundles:
+        ns = ",".join(b.metrics)
+        for k, v in b.meta.items():
+            if k in conflicts:
+                meta[f"{ns}/{k}"] = v
+    return CostModelBundle(models=models, meta=meta)

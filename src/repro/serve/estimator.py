@@ -1,0 +1,336 @@
+"""``CostEstimator``: the single inference facade over trained cost models.
+
+One object answers every online query the paper's deployed model serves —
+generic cost estimation for placed queries (``estimate``), candidate-placement
+scoring (``score``), and full placement search (``optimize``) — constructed
+from an in-memory model dict or a ``CostModelBundle``.  It owns all
+serving-side state that used to be scattered across ``PlacementOptimizer``
+and module-level dicts in ``core/model.py``:
+
+* the per-(query, cluster) **skeleton LRU**: the featurized skeleton, its
+  device transfer, and the trace-time ``QueryStatic``, shared by every
+  ``score``/``optimize`` call on the same pair (the online-monitoring pattern
+  re-scores one query every round);
+* the per-metrics-tuple **stacked-ensemble cache**
+  (``model.stack_metric_models``): all requested metrics ride ONE fused
+  forward when their GNN configs are shape-identical;
+* the **jitted-forward trace caches**.  These live at module level here
+  (moved from ``core/model.py``): a trace is a pure function of (config,
+  query structure, shapes, kernel lowering) — never of the estimator
+  instance — so sharing them across estimators only deduplicates
+  compilation, and the deprecation shims in ``core/model.py`` hit the same
+  warm caches as the facade.
+
+Scoring numerics are unchanged from the pre-facade path: docs/api.md is the
+surface reference, docs/placement_search.md + docs/forward_engine.md the
+engine internals.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import lru_cache
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gnn import apply_gnn_placed, apply_gnn_placed_stacked
+from repro.core.graph import (
+    JointGraph,
+    QueryStatic,
+    batch_graphs,
+    bucket_size,
+    build_a_place_batch,
+    build_graph,
+    build_graph_batch,
+    build_graph_skeleton,
+    pad_batch,
+    query_static,
+    skeleton_cache_key,
+)
+from repro.core.model import (
+    CostModelConfig,
+    StackedEnsembles,
+    _ensemble_vote,
+    _split_votes,
+    forward_ensemble,
+    stack_metric_models,
+)
+from repro.kernels import active_lowering
+
+# -- jitted forward caches --------------------------------------------------------
+#
+# Every cached factory takes the kernels' active lowering as part of its key:
+# the lowering is read at trace time, so without it a flipped
+# REPRO_PALLAS_INTERPRET after the first call would silently reuse stale traces.
+
+
+@lru_cache(maxsize=64)
+def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
+    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+
+
+@lru_cache(maxsize=64)
+def _jitted_forward_stacked(gnn, traditional_mp: bool, lowering: str = "ref"):
+    # metric only selects the loss/vote, never the forward; any metric works
+    cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
+    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+
+
+@lru_cache(maxsize=256)
+def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: str = "ref"):
+    def f(p, skel, a_place):
+        return jax.vmap(
+            lambda pp: apply_gnn_placed(pp, skel, a_place, static, cfg.gnn)[..., 0]
+        )(p)
+
+    return jax.jit(f)
+
+
+@lru_cache(maxsize=256)
+def _jitted_placed_forward_stacked(
+    gnn, static: QueryStatic, n_hw: int, lowering: str = "ref"
+):
+    def f(p, skel, a_place):
+        return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw)
+
+    return jax.jit(f)
+
+
+# -- stateless scoring primitives -------------------------------------------------
+#
+# The numeric cores behind the facade methods AND the core.model deprecation
+# shims.  Prefer the CostEstimator methods: these take raw params and do no
+# skeleton/stack caching.
+
+
+def ensemble_predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Ensemble prediction in *cost space* for a batch of graphs."""
+    raw = _jitted_forward(cfg, active_lowering())(params, g)
+    return _ensemble_vote(np.asarray(raw), cfg)
+
+
+def ensemble_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
+    """Mean over members of the per-member sigmoid probability."""
+    assert cfg.task == "classification"
+    raw = np.asarray(_jitted_forward(cfg, active_lowering())(params, g))
+    return (1.0 / (1.0 + np.exp(-raw))).mean(axis=0)
+
+
+def placed_predict(
+    params, skel: JointGraph, a_place: jax.Array, static: QueryStatic, cfg: CostModelConfig
+) -> np.ndarray:
+    """Ensemble prediction over candidate placements of ONE query.
+
+    ``skel`` is the shared unbatched skeleton, ``a_place`` the ``(B, O, W)``
+    placement adjacencies.  Numerically equivalent to ``ensemble_predict`` on
+    the broadcast batch, via the query-specialized forward (jit-cached per
+    (config, query-structure) pair).  Not available for ``traditional_mp``
+    ablation models — those don't have the 3-stage structure the
+    specialization exploits; callers fall back to the generic path.
+    """
+    assert not cfg.traditional_mp, "use the generic path for traditional_mp models"
+    fwd = _jitted_placed_forward(cfg, static, active_lowering())
+    return _ensemble_vote(np.asarray(fwd(params, skel, a_place)), cfg)
+
+
+def placed_predict_fused(
+    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
+) -> Dict[str, np.ndarray]:
+    """All metrics' ensembles over one query's candidate placements, fused.
+
+    One jitted ``apply_gnn_placed_stacked`` call evaluates every (metric,
+    member) pair in a single launch per GNN stage, on the trimmed active-slot
+    layout; the raw ``(sum_E, B)`` block is then split back per metric and
+    voted exactly like ``placed_predict`` (the stacked-vs-loop equivalence
+    test pins this to float tolerance).
+    """
+    assert not stacked.cfgs[0].traditional_mp, (
+        "use the generic path for traditional_mp models"
+    )
+    n_hw = int(np.asarray(skel.hw_mask).sum())
+    fwd = _jitted_placed_forward_stacked(
+        stacked.cfgs[0].gnn, static, n_hw, active_lowering()
+    )
+    return _split_votes(np.asarray(fwd(stacked.params, skel, a_place)), stacked)
+
+
+# -- the facade -------------------------------------------------------------------
+
+
+class CostEstimator:
+    """Serving facade over a set of trained per-metric ensembles.
+
+    ``models``: dict metric -> (params, CostModelConfig), exactly the shape
+    ``CostModelBundle.models`` carries (``from_bundle`` is the one-liner).
+    Thread-safety: individual calls are safe to issue from one thread at a
+    time; ``PlacementService`` adds the concurrent micro-batching front-end.
+    """
+
+    skeleton_cache_size = 64  # (query, cluster) pairs kept device-resident
+
+    def __init__(self, models: Dict[str, Tuple[object, CostModelConfig]], meta=None):
+        self.models = dict(models)
+        self.meta = dict(meta or {})
+        self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, QueryStatic]]" = OrderedDict()
+        self._stacked: Dict[Tuple[str, ...], Optional[StackedEnsembles]] = {}
+        self._optimizer = None
+
+    @classmethod
+    def from_bundle(cls, bundle) -> "CostEstimator":
+        return cls(bundle.models, meta=bundle.meta)
+
+    @property
+    def metrics(self) -> Tuple[str, ...]:
+        return tuple(self.models)
+
+    def config(self, metric: str) -> CostModelConfig:
+        return self.models[metric][1]
+
+    # -- generic batch estimation -------------------------------------------------
+
+    @staticmethod
+    def _as_graphs(batch) -> JointGraph:
+        """A batched ``JointGraph``, or a sequence of traces to featurize."""
+        if not isinstance(batch, JointGraph):
+            batch = batch_graphs(
+                [build_graph(t.query, t.cluster, t.placement) for t in batch]
+            )
+        return jax.tree_util.tree_map(jnp.asarray, batch)
+
+    def estimate(self, batch, metrics: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+        """Cost-space predictions for a batch of *placed* queries.
+
+        ``batch`` is either a batched ``JointGraph`` or a sequence of traces
+        (anything with ``.query``/``.cluster``/``.placement``), featurized
+        here in one pass.  The batch is transferred to the device once and
+        every requested ensemble (targets + success/backpressure filters)
+        runs over the same resident batch; shape-identical per-metric configs
+        (the COSTREAM default) are additionally fused into ONE stacked
+        forward, heterogeneous configs fall back to a per-metric loop.
+        Returns metric -> predictions aligned with the batch.
+        """
+        metrics = tuple(metrics) if metrics is not None else tuple(self.models)
+        g = self._as_graphs(batch)
+        stacked = self._stacked_for(metrics)
+        if stacked is None:  # mixed architectures: per-metric forwards, shared batch
+            return {
+                m: ensemble_predict(self.models[m][0], g, self.models[m][1])
+                for m in metrics
+            }
+        fwd = _jitted_forward_stacked(
+            stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, active_lowering()
+        )
+        return _split_votes(np.asarray(fwd(stacked.params, g)), stacked)
+
+    def proba(self, batch, metric: str) -> np.ndarray:
+        """Mean ensemble probability for one classification metric."""
+        params, cfg = self.models[metric]
+        return ensemble_proba(params, self._as_graphs(batch), cfg)
+
+    # -- placement scoring --------------------------------------------------------
+
+    def _skeleton_for(self, query, cluster) -> Tuple[JointGraph, QueryStatic]:
+        """Cached (device-resident skeleton, QueryStatic) for one pair."""
+        key = skeleton_cache_key(query, cluster)
+        hit = self._skeletons.get(key)
+        if hit is not None:
+            self._skeletons.move_to_end(key)
+            return hit
+        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(query, cluster))
+        entry = (skel, query_static(query))
+        self._skeletons[key] = entry
+        while len(self._skeletons) > self.skeleton_cache_size:
+            self._skeletons.popitem(last=False)
+        return entry
+
+    def _stacked_for(self, metrics: Tuple[str, ...]) -> Optional[StackedEnsembles]:
+        """Fused ensemble stack for ``metrics``, or None if not fusable."""
+        if metrics not in self._stacked:
+            try:
+                self._stacked[metrics] = stack_metric_models(self.models, metrics)
+            except ValueError:  # heterogeneous per-metric configs
+                self._stacked[metrics] = None
+        return self._stacked[metrics]
+
+    def scorer(self, query, cluster, metrics: Sequence[str]):
+        """Scoring closure with the per-(query, cluster) work hoisted out.
+
+        Refinement loops and repeated ``score``/``optimize`` calls re-score
+        the same query; the skeleton, its device transfer, and the trace-time
+        ``QueryStatic`` are identical throughout, so they come from the
+        instance-level LRU (``_skeleton_for``) — at most ONE skeleton build
+        per pair, and one fused stacked forward per scored batch.
+        """
+        metrics = tuple(metrics)
+        if any(self.models[m][1].traditional_mp for m in metrics):
+            # ablation models lack the 3-stage structure the specialized
+            # forward exploits; build the full broadcast batch instead
+            def score_generic(assignments: np.ndarray) -> Dict[str, np.ndarray]:
+                n = len(assignments)
+                if n == 0:  # not assert: callers (the service) rely on it under -O
+                    raise ValueError("no candidates to score")
+                graphs = pad_batch(
+                    build_graph_batch(query, cluster, assignments), bucket_size(n)
+                )
+                scored = self.estimate(graphs, metrics)
+                return {m: v[:n] for m, v in scored.items()}
+
+            return score_generic
+
+        skel, static = self._skeleton_for(query, cluster)
+        stacked = self._stacked_for(metrics)
+
+        def score(assignments: np.ndarray) -> Dict[str, np.ndarray]:
+            n = len(assignments)
+            if n == 0:  # not assert: callers (the service) rely on it under -O
+                raise ValueError("no candidates to score")
+            a_place = build_a_place_batch(query, cluster, assignments)
+            pad = bucket_size(n) - n
+            if pad:
+                a_place = np.concatenate([a_place, np.repeat(a_place[-1:], pad, axis=0)])
+            a_place = jnp.asarray(a_place)
+            if stacked is not None:
+                scored = placed_predict_fused(stacked, skel, a_place, static)
+                return {m: v[:n] for m, v in scored.items()}
+            return {
+                m: placed_predict(
+                    self.models[m][0], skel, a_place, static, self.models[m][1]
+                )[:n]
+                for m in metrics
+            }
+
+        return score
+
+    def score(
+        self,
+        query,
+        cluster,
+        assignments: np.ndarray,
+        metrics: Optional[Sequence[str]] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Score an ``(N, n_ops)`` assignment matrix on every requested metric.
+
+        One skeleton build per (query, cluster) pair (LRU-amortized), one
+        bucket-padded stacked forward per call; padding rows are sliced off,
+        so results are independent of the bucket and of batchmates.
+        """
+        metrics = tuple(metrics) if metrics is not None else tuple(self.models)
+        return self.scorer(query, cluster, metrics)(
+            np.asarray(assignments, dtype=np.int64)
+        )
+
+    def optimize(self, query, cluster, target_metric: str = "latency_p", **kwargs):
+        """Cost-based placement search (paper SV): sample -> score -> argopt.
+
+        Delegates to a ``PlacementOptimizer`` sharing this estimator (and
+        therefore its caches); see that class for the search knobs
+        (``k``, ``refine_rounds``, ...).
+        """
+        if self._optimizer is None:
+            from repro.placement.optimizer import PlacementOptimizer
+
+            self._optimizer = PlacementOptimizer(self)
+        return self._optimizer.optimize(query, cluster, target_metric, **kwargs)

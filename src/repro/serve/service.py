@@ -1,0 +1,239 @@
+"""``PlacementService``: a micro-batching front-end over a ``CostEstimator``.
+
+The paper deploys COSTREAM by running "parallel instances" to score candidate
+placements concurrently (§V); the TPU-native analogue is not N processes but
+ONE fused forward whose batch axis carries every concurrent request.  This
+service is that serving layer: requests are submitted from any thread and
+answered with futures, while a single worker drains everything queued at each
+wake-up — adaptive micro-batching, so while one fused forward runs, new
+requests pile up and form the next batch — and answers each compatible group
+with one bucket-padded stacked forward through the shared estimator:
+
+* ``score`` requests coalesce when they target the same (query structure,
+  cluster, metrics): their assignment matrices are concatenated along the
+  candidate axis, scored once, and split back per request.  Scores are
+  batchmate-independent (the padding-invariance tests pin this), so
+  coalescing is invisible to callers;
+* ``estimate`` requests coalesce per metrics tuple: every ``JointGraph``
+  shares the same padded layout, so batches concatenate along the batch axis.
+
+Throughput economics: each forward pays a fixed dispatch cost that dominates
+these small graphs, so B coalesced requests cost ~1 dispatch instead of B —
+``benchmarks/serve_bench.py`` gates the resulting requests/s win in CI.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.bucketing import bucket_size, pad_batch
+from repro.core.graph import JointGraph, skeleton_cache_key
+from repro.serve.estimator import CostEstimator
+
+
+@dataclass
+class ServiceStats:
+    """Worker-side counters (mutated under the service lock)."""
+
+    n_requests: int = 0
+    n_batches: int = 0  # worker wake-ups that executed work
+    n_forwards: int = 0  # estimator calls issued (one per group chunk)
+    n_coalesced: int = 0  # requests that shared a forward with another
+
+    def reset(self) -> None:
+        self.n_requests = self.n_batches = self.n_forwards = self.n_coalesced = 0
+
+
+class _Request(NamedTuple):
+    kind: str  # "score" | "estimate"
+    key: Tuple  # coalescing key: equal keys share one forward
+    payload: Tuple
+    future: Future
+
+
+class PlacementService:
+    """Coalesces concurrent estimate/score requests into fused forwards.
+
+    ``max_batch`` bounds the candidate rows (score) / graphs (estimate) per
+    fused forward — a group beyond it is scored in chunks.  ``auto_start``
+    False leaves the worker stopped so tests (and one-shot batch jobs) can
+    enqueue everything first and then ``start()`` for one deterministic
+    drain.  Use as a context manager or call ``close()`` to stop the worker.
+    """
+
+    def __init__(
+        self,
+        estimator: CostEstimator,
+        max_batch: int = 1024,
+        auto_start: bool = True,
+    ):
+        self.estimator = estimator
+        self.max_batch = int(max_batch)
+        self.stats = ServiceStats()
+        self._queue: "deque[_Request]" = deque()
+        self._cond = threading.Condition()
+        self._stopped = False
+        self._thread: Optional[threading.Thread] = None
+        if auto_start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------------
+
+    def start(self) -> "PlacementService":
+        with self._cond:
+            if self._stopped:  # not assert: a submit after close() must fail
+                raise RuntimeError("PlacementService is closed")
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, name="placement-service", daemon=True
+                )
+                self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the worker after draining everything already queued.
+
+        Closing a service that was never started fails any queued futures
+        instead of leaving their waiters hanging forever."""
+        with self._cond:
+            self._stopped = True
+            orphans = list(self._queue) if self._thread is None else []
+            if orphans:
+                self._queue.clear()
+            self._cond.notify_all()
+        for r in orphans:
+            r.future.set_exception(RuntimeError("PlacementService closed before start"))
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "PlacementService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ---------------------------------------------------------------
+
+    def _submit(self, req: _Request) -> Future:
+        with self._cond:
+            if self._stopped:  # not assert: under -O the future would hang forever
+                raise RuntimeError("PlacementService is closed")
+            self._queue.append(req)
+            self.stats.n_requests += 1
+            self._cond.notify()
+        return req.future
+
+    def _resolve_metrics(self, metrics: Optional[Sequence[str]]) -> Tuple[str, ...]:
+        return tuple(metrics) if metrics is not None else tuple(self.estimator.models)
+
+    def submit_score(
+        self,
+        query,
+        cluster,
+        assignments: np.ndarray,
+        metrics: Optional[Sequence[str]] = None,
+    ) -> Future:
+        """Async ``CostEstimator.score``; resolves to metric -> (N,) scores."""
+        metrics = self._resolve_metrics(metrics)
+        a = np.asarray(assignments, dtype=np.int64)
+        key = ("score", skeleton_cache_key(query, cluster), metrics)
+        return self._submit(_Request("score", key, (query, cluster, a, metrics), Future()))
+
+    def submit_estimate(
+        self, graphs: JointGraph, metrics: Optional[Sequence[str]] = None
+    ) -> Future:
+        """Async ``CostEstimator.estimate`` over a batched ``JointGraph``."""
+        metrics = self._resolve_metrics(metrics)
+        if not isinstance(graphs, JointGraph):
+            graphs = self.estimator._as_graphs(graphs)
+        if graphs.op_x.ndim == 2:  # single graph: promote to a batch of one
+            graphs = jax.tree_util.tree_map(lambda x: np.asarray(x)[None], graphs)
+        key = ("estimate", metrics)
+        return self._submit(_Request("estimate", key, (graphs, metrics), Future()))
+
+    def score(self, query, cluster, assignments, metrics=None) -> Dict[str, np.ndarray]:
+        """Synchronous convenience: submit one score request and wait."""
+        return self.submit_score(query, cluster, assignments, metrics).result()
+
+    def estimate(self, graphs, metrics=None) -> Dict[str, np.ndarray]:
+        """Synchronous convenience: submit one estimate request and wait."""
+        return self.submit_estimate(graphs, metrics).result()
+
+    # -- worker -------------------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopped:
+                    self._cond.wait()
+                if not self._queue:  # stopped and drained
+                    return
+                batch = list(self._queue)
+                self._queue.clear()
+                self.stats.n_batches += 1
+            groups: Dict[Tuple, List[_Request]] = {}  # dicts preserve insertion order
+            for req in batch:
+                groups.setdefault(req.key, []).append(req)
+            for reqs in groups.values():
+                try:
+                    self._execute_group(reqs)
+                except BaseException as e:  # deliver, don't kill the worker
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(e)
+
+    def _execute_group(self, reqs: List[_Request]) -> None:
+        n_forwards = 0
+        if reqs[0].kind == "score":
+            query, cluster, _, metrics = reqs[0].payload
+            mats = [r.payload[2] for r in reqs]
+            sizes = [len(m) for m in mats]
+            merged = np.concatenate(mats, axis=0)
+            parts = []
+            # max(.., 1): an all-empty group still reaches the estimator so
+            # callers get its meaningful "no candidates" error back
+            for s in range(0, max(len(merged), 1), self.max_batch):
+                parts.append(
+                    self.estimator.score(query, cluster, merged[s : s + self.max_batch], metrics)
+                )
+                n_forwards += 1
+            answers = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+        else:
+            metrics = reqs[0].payload[1]
+            graphs = [r.payload[0] for r in reqs]
+            sizes = [int(np.asarray(g.op_x).shape[0]) for g in graphs]
+            merged = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0), *graphs
+            )
+            total = sum(sizes)
+            if total == 0:
+                raise ValueError("no graphs to estimate")
+            parts = []
+            # max_batch-chunk like the score path, and bucket-pad each chunk:
+            # coalescing produces arbitrary merged sizes, which would
+            # otherwise each pay a fresh jit trace
+            for s in range(0, total, self.max_batch):
+                chunk = jax.tree_util.tree_map(lambda x: x[s : s + self.max_batch], merged)
+                n = int(chunk.op_x.shape[0])
+                out = self.estimator.estimate(pad_batch(chunk, bucket_size(n)), metrics)
+                parts.append({m: v[:n] for m, v in out.items()})
+                n_forwards += 1
+            answers = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+        # count the work before resolving futures, so a caller woken by
+        # result() never observes counters lagging its own answer
+        with self._cond:
+            self.stats.n_forwards += n_forwards
+            if len(reqs) > 1:
+                self.stats.n_coalesced += len(reqs)
+        off = 0
+        for r, size in zip(reqs, sizes):
+            r.future.set_result({m: answers[m][off : off + size] for m in metrics})
+            off += size

@@ -300,17 +300,20 @@ def test_use_pallas_raises_loudly_on_unfusable_config():
 
 def test_skeleton_cached_across_optimize_calls(monkeypatch):
     """The second optimize() on the same (query, cluster) must perform ZERO
-    build_graph_skeleton rebuilds (the online-monitoring amortization)."""
-    import repro.placement.optimizer as optimizer_mod
+    build_graph_skeleton rebuilds (the online-monitoring amortization).
+
+    The skeleton LRU lives on the CostEstimator facade since the serving
+    redesign, so the counter patches repro.serve.estimator."""
+    import repro.serve.estimator as estimator_mod
 
     calls = {"n": 0}
-    orig = optimizer_mod.build_graph_skeleton
+    orig = estimator_mod.build_graph_skeleton
 
     def counted(*args, **kw):
         calls["n"] += 1
         return orig(*args, **kw)
 
-    monkeypatch.setattr(optimizer_mod, "build_graph_skeleton", counted)
+    monkeypatch.setattr(estimator_mod, "build_graph_skeleton", counted)
     opt = PlacementOptimizer(_tiny_models())
     q = GEN.query(kind="linear", name="cache")
     c = GEN.cluster(6)
