@@ -1,24 +1,34 @@
-"""Serving microbenchmark: requests/s, one-at-a-time vs micro-batched.
+"""Serving microbenchmark: requests/s under three request-stream shapes.
 
-Drives ``repro.serve.PlacementService`` with a stream of small placement-
-scoring requests (the paper's online pattern: many concurrent "parallel
-COSTREAM instance" queries, each scoring a handful of candidates) in two
-submission modes over the SAME requests, models, and service code path:
+Drives ``repro.serve.PlacementService`` with streams of small requests (the
+paper's online pattern: many concurrent "parallel COSTREAM instance"
+queries, each scoring a handful of candidates) over the SAME requests,
+models, and service code path:
 
-  serial     submit one request, wait for its result, submit the next —
-             queue depth never builds, so every request pays one full
-             dispatch (the fixed per-forward overhead dominates these small
-             graphs);
-  coalesced  submit the whole stream, then gather — requests pile up while
-             the worker is busy and get coalesced into a few fused
-             bucket-padded stacked forwards.
+  --mode score (default)
+      one hot query structure; ``serial`` (submit, wait, repeat — every
+      request pays one full dispatch) vs ``coalesced`` (submit the whole
+      stream, then gather — requests pile up and share fused bucket-padded
+      stacked forwards);
+  --mode mixed
+      N DISTINCT query structures round-robin — the heterogeneous stream the
+      cross-query broadcast-batch path exists for.  ``grouped``
+      (cross_query=False: one forward per structure per drain, the pre-merge
+      behavior) vs ``cross`` (cross_query=True: the whole drain merges into
+      one signature-banded stacked forward per max_batch rows).  Both modes
+      drain a pre-queued stream once (deterministic batch shapes);
+  --mode estimate
+      cost-estimate requests for batches of placed queries; ``serial`` vs
+      ``coalesced`` submission, exercising the estimate coalescing path.
 
-Both modes are verified against direct ``CostEstimator.score`` answers
-before timing, and all bucket shapes the coalescer can produce are warmed
-up front, so the ratio isolates micro-batching — not compilation.
+Every mode verifies its answers against direct ``CostEstimator`` calls
+before timing, and the verification pass runs the exact drains that are
+later timed, so every jit shape is warm and the ratios isolate batching —
+not compilation.
 
-    PYTHONPATH=src python benchmarks/serve_bench.py [--quick]
-        [--min-speedup X]                      # coalesced/serial rps floor
+    PYTHONPATH=src python benchmarks/serve_bench.py [--mode score|mixed|estimate]
+        [--quick]
+        [--min-speedup X]                      # mode ratio floor
         [--baseline FILE --max-regression F]   # ratio gate vs recorded run
 """
 
@@ -126,10 +136,191 @@ def run(n_requests: int, cands_per_request: int, repeats: int, seed: int = 0) ->
     }
 
 
+def _mixed_structures(n_structures: int, seed: int):
+    """n DISTINCT (query, cluster) structures cycling the corpus query kinds."""
+    gen = WorkloadGenerator(seed=seed)
+    kinds = ("linear", "two_way", "three_way")
+    return [
+        (gen.query(kind=kinds[i % len(kinds)], name=f"mix{i}"), gen.cluster(3 + i % 6))
+        for i in range(n_structures)
+    ]
+
+
+def _drain_once(svc, submit):
+    """Pre-queue a whole stream, start the worker, gather: ONE deterministic
+    drain (stable batch shapes — the methodology for drain-vs-drain ratios)."""
+    futs = submit(svc)
+    t0 = time.perf_counter()
+    svc.start()
+    results = [f.result() for f in futs]
+    elapsed = time.perf_counter() - t0
+    return results, elapsed
+
+
+def run_mixed(
+    n_structures: int, reqs_per_structure: int, cands: int, repeats: int, seed: int = 0
+) -> dict:
+    """Cross-query coalescing vs the per-structure-group drain on a stream of
+    many DISTINCT small queries (requests round-robin the structures, so
+    every drain sees all of them interleaved)."""
+    repeats = max(1, repeats)
+    structures = _mixed_structures(n_structures, seed)
+    rng = np.random.default_rng(seed)
+    requests = []
+    for _ in range(reqs_per_structure):
+        for q, c in structures:
+            requests.append((q, c, sample_assignment_matrix(q, c, cands, rng)))
+
+    est = make_estimator()
+    ref = [est.score(q, c, a, METRICS) for q, c, a in requests]
+
+    def submit(svc):
+        return [svc.submit_score(q, c, a, METRICS) for q, c, a in requests]
+
+    def make_svc(mode):
+        # row_limit=None: the bench CONTRASTS the two drain strategies, so the
+        # cross service must merge rather than adaptively fall back
+        return PlacementService(
+            est,
+            auto_start=False,
+            cross_query=(mode == "cross"),
+            cross_query_row_limit=None,
+        )
+
+    # correctness first (this also warms every drain shape both modes use):
+    # cross-query merging must be invisible to callers
+    forwards = {}
+    for mode in ("grouped", "cross"):
+        svc = make_svc(mode)
+        got, _ = _drain_once(svc, submit)
+        svc.close()
+        forwards[mode] = svc.stats.n_forwards
+        for want, have in zip(ref, got):
+            for m in METRICS:
+                np.testing.assert_allclose(
+                    have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=f"{mode}:{m}"
+                )
+
+    timings = {}
+    for mode in ("grouped", "cross"):
+        best = np.inf
+        for _ in range(repeats):
+            svc = make_svc(mode)
+            _, elapsed = _drain_once(svc, submit)
+            svc.close()
+            best = min(best, elapsed)
+        timings[mode] = best
+
+    n_requests = len(requests)
+    rate = {m: n_requests / t for m, t in timings.items()}
+    return {
+        "mode": "mixed",
+        "n_structures": n_structures,
+        "n_requests": n_requests,
+        "cands_per_request": cands,
+        "n_metrics": len(METRICS),
+        "repeats": repeats,
+        "grouped_s": round(timings["grouped"], 4),
+        "cross_s": round(timings["cross"], 4),
+        "grouped_rps": round(rate["grouped"], 1),
+        "cross_rps": round(rate["cross"], 1),
+        "grouped_forwards": forwards["grouped"],
+        "cross_forwards": forwards["cross"],
+        "cross_vs_grouped": round(rate["cross"] / rate["grouped"], 2),
+    }
+
+
+def run_estimate(n_requests: int, graphs_per_request: int, repeats: int, seed: int = 0) -> dict:
+    """Estimate-request coalescing: serial submit-and-wait vs a pre-queued
+    drain of cost-estimate requests for batches of placed queries."""
+    from repro.core.graph import batch_graphs, build_graph
+
+    repeats = max(1, repeats)
+    traces = WorkloadGenerator(seed=seed).corpus(n_requests * graphs_per_request)
+    requests = [
+        batch_graphs(
+            [
+                build_graph(t.query, t.cluster, t.placement)
+                for t in traces[i * graphs_per_request : (i + 1) * graphs_per_request]
+            ]
+        )
+        for i in range(n_requests)
+    ]
+    est = make_estimator()
+    ref = [est.estimate(g, METRICS) for g in requests]
+
+    def submit(svc):
+        return [svc.submit_estimate(g, METRICS) for g in requests]
+
+    # correctness + warmup for both submission patterns
+    with PlacementService(est) as svc:
+        serial = [svc.estimate(g, METRICS) for g in requests]
+    svc_c = PlacementService(est, auto_start=False)
+    coalesced, _ = _drain_once(svc_c, submit)
+    svc_c.close()
+    coalesced_forwards = svc_c.stats.n_forwards
+    for name, got in (("serial", serial), ("coalesced", coalesced)):
+        for want, have in zip(ref, got):
+            for m in METRICS:
+                np.testing.assert_allclose(
+                    have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=f"{name}:{m}"
+                )
+
+    timings = {}
+    forwards = {"coalesced": coalesced_forwards}
+    best = np.inf
+    with PlacementService(est) as svc:
+        for _ in range(repeats):
+            svc.stats.reset()
+            t0 = time.perf_counter()
+            for g in requests:
+                svc.estimate(g, METRICS)
+            best = min(best, time.perf_counter() - t0)
+        forwards["serial"] = svc.stats.n_forwards
+    timings["serial"] = best
+    best = np.inf
+    for _ in range(repeats):
+        svc = PlacementService(est, auto_start=False)
+        _, elapsed = _drain_once(svc, submit)
+        svc.close()
+        best = min(best, elapsed)
+    timings["coalesced"] = best
+
+    rate = {m: n_requests / t for m, t in timings.items()}
+    return {
+        "mode": "estimate",
+        "n_requests": n_requests,
+        "graphs_per_request": graphs_per_request,
+        "n_metrics": len(METRICS),
+        "repeats": repeats,
+        "serial_s": round(timings["serial"], 4),
+        "coalesced_s": round(timings["coalesced"], 4),
+        "serial_rps": round(rate["serial"], 1),
+        "coalesced_rps": round(rate["coalesced"], 1),
+        "serial_forwards": forwards["serial"],
+        "coalesced_forwards": forwards["coalesced"],
+        "coalesced_vs_serial": round(rate["coalesced"] / rate["serial"], 2),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--requests", type=int, default=96)
-    ap.add_argument("--cands", type=int, default=8, help="candidates per request")
+    ap.add_argument("--mode", choices=("score", "mixed", "estimate"), default="score")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument(
+        "--cands",
+        type=int,
+        default=None,
+        help="candidates per request (default 8; mixed mode 2 — the "
+        "dispatch-bound refinement-loop shape cross-query merging is built "
+        "for: each distinct query scores a couple of alternative placements)",
+    )
+    ap.add_argument(
+        "--structures", type=int, default=16, help="distinct query structures (mixed)"
+    )
+    ap.add_argument(
+        "--graphs", type=int, default=4, help="graphs per estimate request"
+    )
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--quick", action="store_true", help="small run for per-PR CI")
     ap.add_argument("--min-speedup", type=float, default=None, help="fail below this")
@@ -137,7 +328,7 @@ def main(argv=None):
         "--baseline",
         type=str,
         default=None,
-        help="JSON with a recorded coalesced_vs_serial ratio",
+        help="JSON with this mode's recorded ratio",
     )
     ap.add_argument(
         "--max-regression",
@@ -146,31 +337,44 @@ def main(argv=None):
         help="allowed fractional drop of the measured ratio below the baseline",
     )
     args = ap.parse_args(argv)
+    if args.cands is None:
+        args.cands = 2 if args.mode == "mixed" else 8
+    if args.requests is None:
+        args.requests = 48 if args.mode == "mixed" else 96
     if args.quick:
-        args.requests, args.repeats = 48, 3
+        args.repeats = 3
+        args.requests = 32 if args.mode == "mixed" else 48
 
-    res = run(args.requests, args.cands, args.repeats)
+    if args.mode == "mixed":
+        reqs_per_structure = max(1, args.requests // args.structures)
+        res = run_mixed(args.structures, reqs_per_structure, args.cands, args.repeats)
+        ratio_key, fewer = "cross_vs_grouped", ("cross_forwards", "grouped_forwards")
+    elif args.mode == "estimate":
+        res = run_estimate(args.requests, args.graphs, args.repeats)
+        ratio_key, fewer = "coalesced_vs_serial", ("coalesced_forwards", "serial_forwards")
+    else:
+        res = run(args.requests, args.cands, args.repeats)
+        ratio_key, fewer = "coalesced_vs_serial", ("coalesced_forwards", "serial_forwards")
     print(json.dumps(res, indent=2))
     # not assert: these are the CI gate's invariants, they must survive python -O
-    if res["coalesced_forwards"] >= res["serial_forwards"]:
+    if res[fewer[0]] >= res[fewer[1]]:
         raise SystemExit(
-            "coalescing must issue fewer forwards than serial submission, got "
-            f"{res['coalesced_forwards']} vs {res['serial_forwards']}"
+            "batching must issue fewer forwards than the baseline drain, got "
+            f"{res[fewer[0]]} vs {res[fewer[1]]}"
         )
-    if args.min_speedup is not None and res["coalesced_vs_serial"] < args.min_speedup:
+    if args.min_speedup is not None and res[ratio_key] < args.min_speedup:
         raise SystemExit(
-            f"coalescing speedup {res['coalesced_vs_serial']}x below required "
-            f"{args.min_speedup}x"
+            f"{ratio_key} speedup {res[ratio_key]}x below required {args.min_speedup}x"
         )
     if args.baseline:
         with open(args.baseline) as f:
             base = json.load(f)
-        floor = base["coalesced_vs_serial"] * (1.0 - args.max_regression)
-        if res["coalesced_vs_serial"] < floor:
+        floor = base[ratio_key] * (1.0 - args.max_regression)
+        if res[ratio_key] < floor:
             raise SystemExit(
-                f"coalesced_vs_serial ratio {res['coalesced_vs_serial']} regressed >"
+                f"{ratio_key} ratio {res[ratio_key]} regressed >"
                 f"{args.max_regression:.0%} below recorded baseline "
-                f"{base['coalesced_vs_serial']} (floor {floor:.3f})"
+                f"{base[ratio_key]} (floor {floor:.3f})"
             )
 
 

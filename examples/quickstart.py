@@ -49,18 +49,53 @@ def main(argv=None):
         models={"latency_p": (result.params, cfg)},
         meta={"corpus": n_corpus, "epochs": epochs, "best_val": result.best_val},
     )
+    # load() is lazy by default (params deserialize on first use), so the
+    # bundle directory must outlive the estimator serving from it — keep the
+    # tempdir open for the whole serving session below
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "latency_bundle")
         bundle.save(path)
         served = CostModelBundle.load(path)
-    print(f"bundle round-trip: metrics={served.metrics} meta={served.meta}")
+        print(f"bundle round-trip: metrics={served.metrics} meta={served.meta}")
+        serve_session(served, gen, test)
 
+
+def serve_session(served, gen, test):
     # 4. zero-shot predictions on unseen placed queries via the facade
     est = CostEstimator.from_bundle(served)
     pred = est.estimate(test.graphs, metrics=["latency_p"])["latency_p"]
     print("\nq-error on held-out queries:", qerror_summary(test.labels, pred))
     for i in range(3):
         print(f"  query {i}: true {test.labels[i]:9.1f} ms   predicted {pred[i]:9.1f} ms")
+
+    # 5. serving a heterogeneous stream: many DISTINCT small queries arrive
+    #    concurrently, each scoring a couple of candidate placements.  The
+    #    PlacementService groups score requests per metrics tuple and answers
+    #    a whole dispatch-bound drain with ONE merged cross-query forward
+    #    (docs/forward_engine.md#merged) instead of one per structure.
+    import numpy as np
+
+    from repro import PlacementService
+    from repro.placement import sample_assignment_matrix
+
+    rng = np.random.default_rng(7)
+    stream = []
+    for i, kind in enumerate(["linear", "two_way", "three_way", "linear"] * 2):
+        q = gen.query(kind=kind, name=f"stream{i}")
+        c = gen.cluster(3 + i % 5)
+        stream.append((q, c, sample_assignment_matrix(q, c, 2, rng)))
+    svc = PlacementService(est, auto_start=False)  # queue first: one drain
+    futures = [svc.submit_score(q, c, a, ["latency_p"]) for q, c, a in stream]
+    svc.start()
+    answers = [f.result() for f in futures]
+    svc.close()
+    print(f"\nheterogeneous stream: {len(stream)} distinct queries answered by "
+          f"{svc.stats.n_forwards} fused forward(s) "
+          f"({svc.stats.n_cross_query} cross-query coalesced)")
+    for i in (0, 1):
+        best = answers[i]["latency_p"].argmin()
+        print(f"  {stream[i][0].name}: best of {len(answers[i]['latency_p'])} "
+              f"candidates predicts {answers[i]['latency_p'][best]:9.1f} ms")
 
 
 if __name__ == "__main__":

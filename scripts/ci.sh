@@ -18,8 +18,11 @@ python benchmarks/placement_bench.py --quick --min-speedup 3 \
 
 echo "== training step perf (quick) =="
 # the unified engine's training step must stay >= 1.5x the seed per-member
-# path at batch 256 and must not regress >10% below the recorded baseline
+# path at batch 256 and must not regress >10% below the recorded baseline;
+# signature-exact banding must be no slower per step than the bucket-
+# conservative plan (and strictly fewer stage-3 rows, asserted inside)
 python benchmarks/training_bench.py --quick --min-speedup 1.5 \
+  --min-exact-ratio 1.0 \
   --baseline benchmarks/baselines/training_bench_quick.json --max-regression 0.10
 
 echo "== serving micro-batch perf (quick) =="
@@ -27,6 +30,13 @@ echo "== serving micro-batch perf (quick) =="
 # submission and must not regress >10% below the recorded baseline
 python benchmarks/serve_bench.py --quick --min-speedup 2 \
   --baseline benchmarks/baselines/serve_bench_quick.json --max-regression 0.10
+
+echo "== mixed-stream cross-query perf (quick) =="
+# the cross-query broadcast drain must answer a 16-distinct-structure stream
+# >= 2x faster than the per-structure-group drain (one forward per drain vs
+# one per structure) and must not regress >10% below the recorded baseline
+python benchmarks/serve_bench.py --mode mixed --quick --min-speedup 2 \
+  --baseline benchmarks/baselines/serve_bench_mixed_quick.json --max-regression 0.10
 
 echo "== examples smoke (API drift gate) =="
 # the examples exercise the public train->bundle->serve surface end to end;

@@ -16,9 +16,12 @@ from repro.core.graph import (
     MAX_OPS,
     MAX_HW,
     BatchBanding,
+    BroadcastBatch,
     JointGraph,
     QueryStatic,
     batch_banding,
+    batch_signature,
+    broadcast_skeleton,
     bucket_size,
     build_a_place_batch,
     build_graph,
@@ -27,6 +30,9 @@ from repro.core.graph import (
     batch_graphs,
     drop_hardware,
     drop_hw_features,
+    exact_banding,
+    exact_banding_cached,
+    merge_graph_batches,
     pad_batch,
     query_static,
 )

@@ -329,6 +329,26 @@ def _stages123(
     return nn.apply_mlp(params["out"], pooled)
 
 
+def _trim_rows(g: JointGraph, rows: Tuple[int, ...]) -> JointGraph:
+    """Statically gather ``rows`` out of the padded operator axis.
+
+    The dropped rows hold no operator in ANY graph of the batch (the
+    ``exact_banding`` trim contract): their states are masked to exact zero
+    before every reduction, so removing them changes no prediction or
+    gradient — it only removes their dense work.  Hardware rows stay
+    untouched (MAX_HW is small and ``a_place`` columns are per-host).
+    """
+    idx = jnp.asarray(rows)
+    return g._replace(
+        op_x=jnp.take(g.op_x, idx, axis=-2),
+        op_type=jnp.take(g.op_type, idx, axis=-1),
+        op_mask=jnp.take(g.op_mask, idx, axis=-1),
+        op_depth=jnp.take(g.op_depth, idx, axis=-1),
+        a_flow=jnp.take(jnp.take(g.a_flow, idx, axis=-2), idx, axis=-1),
+        a_place=jnp.take(g.a_place, idx, axis=-2),
+    )
+
+
 def apply_gnn_batch(
     params: nn.Params,
     g: JointGraph,
@@ -340,20 +360,27 @@ def apply_gnn_batch(
     Rank-polymorphic: a single ``(N, .)`` graph or a ``(B, N, .)`` batch run
     the same code — banked MLPs execute ONCE across the whole padded batch
     (one launch per stage), not per-graph under vmap.  ``banding`` (from
-    ``graph.batch_banding``, static per bucket) replaces the full
-    ``max_depth`` stage-3 scan with one banded step per non-empty depth
-    level; without it the sweep falls back to the seed-equivalent full scan.
+    ``bucketing.batch_banding`` / ``exact_banding``, static per bucket or
+    per signature set) replaces the full ``max_depth`` stage-3 scan with one
+    banded step per non-empty depth level; a banding carrying a row trim
+    additionally gathers the batch onto its all-graphs-active row subset and
+    runs EVERY stage there (``banding.ranges`` are that layout's type runs).
+    Without a banding the sweep falls back to the seed-equivalent full scan.
     ``cfg.use_pallas`` routes stages 0-2 through ``kernels/banked_mlp`` and
     stage 3 through ``kernels/mp_update`` (see module docstring).
     """
+    ranges = SLOT_RANGES
+    if banding is not None and banding.rows is not None:
+        g = _trim_rows(g, banding.rows)
+        ranges = banding.ranges
     op_mask = g.op_mask[..., None]
     hw_mask = g.hw_mask[..., None]
-    h_ops0 = _apply_bank(params["op_enc"], g.op_x, cfg) * op_mask
+    h_ops0 = _apply_bank(params["op_enc"], g.op_x, cfg, ranges) * op_mask
     h_hw0 = _apply_shared(params["hw_enc"], g.hw_x, cfg, "hw_enc") * hw_mask
     plan = (
         StagePlan("scan", depth_max=cfg.max_depth)
         if banding is None
-        else _banded_plan(banding)
+        else _banded_plan(banding, ranges)
     )
     return _stages123(
         params,
@@ -363,7 +390,7 @@ def apply_gnn_batch(
         g.a_flow,
         g.op_depth,
         cfg,
-        ranges=SLOT_RANGES,
+        ranges=ranges,
         plan=plan,
         op_mask=op_mask,
         hw_mask=hw_mask,
@@ -395,6 +422,105 @@ def apply_gnn_stacked(
     forward instead of one per member.
     """
     return jax.vmap(lambda p: apply_gnn_batch(p, g, cfg, banding))(params)[..., 0]
+
+
+def apply_gnn_merged(
+    params: nn.Params,
+    skels: JointGraph,  # (S, N, .) stacked skeletons (``a_place`` ignored)
+    skel_id: jax.Array,  # (B,) int: row -> skeleton
+    a_place: jax.Array,  # (B, N, W) one-hot placement adjacency per row
+    cfg: GNNConfig,
+    banding: BatchBanding,
+    max_parents: int = 2,
+) -> jax.Array:
+    """ONE member-stacked forward over candidates of S DISTINCT structures.
+
+    The cross-query serving engine: a merged drain's rows reference their
+    structure through ``skel_id`` instead of materializing per-row skeleton
+    copies, and the graph's sparsity is static — every operator has at most
+    ``max_parents`` data-flow parents and exactly one host — so the
+    aggregations that the generic batched engine expresses as per-graph
+    adjacency matmuls (batched tiny GEMMs, dispatch-bound on CPU backends)
+    become gathers and W-unrolled masked sums:
+
+      * stage 0 runs on the S unique skeletons and is *gathered* per row —
+        candidates of one structure never re-encode its operators;
+      * stage 1 (OPS->HW) is a per-row segment scatter-add: each host state
+        accumulates the operator states placed on it;
+      * stage 2 (HW->OPS) gathers each operator's single host state;
+      * stage 3 levels gather each in-span row's ``max_parents`` parent
+        states (per-skeleton parent tables, built once from ``a_flow``) and
+        run the banked update at the banding's static ``row_span``.
+
+    Numerically equal to ``apply_gnn_stacked`` on the expanded broadcast
+    batch to float tolerance (same sums, different association — the
+    mixed-stream parity tests pin it).  jnp-only by design: ``use_pallas``
+    configs keep the dense banded path, whose kernels own TPU tiling.
+    ``banding`` must come from ``bucketing.exact_banding_cached`` over
+    ``skels`` (signature sets are padding-invariant, so it also covers every
+    chunk of the batch).  Returns ``(members, B)`` raw outputs.
+    """
+    assert not cfg.use_pallas, "merged path is the jnp CPU fast path"
+    ranges = SLOT_RANGES
+    if banding.rows is not None:
+        skels = _trim_rows(skels, banding.rows)
+        a_place = jnp.take(a_place, jnp.asarray(banding.rows), axis=-2)
+        ranges = banding.ranges
+    plan = _banded_plan(banding, ranges)
+    n_hw = skels.hw_x.shape[-2]
+
+    # static sparsity, derived once per trace: parent tables per skeleton
+    # (columns of a_flow hold each row's parents) and one host per row
+    flow_in = jnp.swapaxes(skels.a_flow, -1, -2)  # (S, N, N): [v, u] = u -> v
+    pidx = jnp.argsort(-flow_in, axis=-1)[..., :max_parents]  # (S, N, P)
+    pmask = jnp.take_along_axis(flow_in, pidx, axis=-1)  # (S, N, P) in {0,1}
+    row_pidx = pidx[skel_id]  # (B, N, P)
+    row_pmask = pmask[skel_id][..., None]  # (B, N, P, 1)
+    host = jnp.argmax(a_place, axis=-1)  # (B, N)
+    placed = jnp.max(a_place, axis=-1)[..., None]  # (B, N, 1): 0 for padded rows
+    op_mask_s = skels.op_mask[..., None]  # (S, N, 1)
+    hw_mask_b = skels.hw_mask[skel_id][..., None]  # (B, W, 1)
+    op_mask_b = op_mask_s[skel_id]  # (B, N, 1)
+    depth_b = skels.op_depth[skel_id]  # (B, N)
+    b_rows = a_place.shape[0]
+
+    def member_fwd(pp):
+        # stage 0 on the S skeletons only, gathered out per candidate row
+        h_ops_s = _apply_bank(pp["op_enc"], skels.op_x, cfg, ranges) * op_mask_s
+        h_hw_s = _apply_shared(pp["hw_enc"], skels.hw_x, cfg, "hw_enc") * skels.hw_mask[..., None]
+        h0 = h_ops_s[skel_id]  # (B, N, H)
+        hw0 = h_hw_s[skel_id]  # (B, W, H)
+
+        # stage 1: hosts absorb their operators (segment scatter-add per row)
+        def seg_sum(h_row, host_row):
+            return jnp.zeros((n_hw, h_row.shape[-1]), h_row.dtype).at[host_row].add(h_row)
+
+        msg_hw = jax.vmap(seg_sum)(h0 * placed, host)  # (B, W, H)
+        h_hw = _apply_shared(pp["hw_upd"], jnp.concatenate([hw0, msg_hw], -1), cfg, "hw_upd")
+        h_hw = h_hw * hw_mask_b
+
+        # stage 2: operators absorb their single host's state (gather)
+        msg_ops = jnp.take_along_axis(h_hw, host[..., None], axis=-2) * placed
+        h = _apply_bank(pp["op_upd"], jnp.concatenate([h0, msg_ops], -1), cfg, ranges)
+        h = h * op_mask_b
+
+        # stage 3: banded levels; parents gathered, never contracted
+        for d, (s, e), level_ranges, _ in plan.levels:
+            pi = row_pidx[:, s:e]  # (B, e-s, P)
+            gat = jnp.take_along_axis(
+                h, pi.reshape(b_rows, -1, 1), axis=-2
+            ).reshape(*pi.shape, -1)  # (B, e-s, P, H)
+            msg = (gat * row_pmask[:, s:e]).sum(axis=-2)
+            z = jnp.concatenate([h[:, s:e], msg], axis=-1)
+            shifted = tuple((t, a - s, b - s) for t, a, b in level_ranges)
+            upd = nn.apply_mlp_bank_slotted(pp["op_upd"], z, shifted)
+            sel = ((depth_b[:, s:e] == d) & (op_mask_b[:, s:e, 0] > 0))[..., None]
+            h = h.at[:, s:e].set(jnp.where(sel, upd, h[:, s:e]))
+
+        pooled = jnp.sum(h, axis=-2) + jnp.sum(h_hw, axis=-2)
+        return nn.apply_mlp(pp["out"], pooled)[..., 0]
+
+    return jax.vmap(member_fwd)(params)
 
 
 def apply_gnn_placed(

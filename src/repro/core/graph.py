@@ -9,7 +9,7 @@ graphs when arrays carry a leading batch dim; ``batch_graphs`` stacks singles.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple, Tuple
 
 import numpy as np
 
@@ -233,6 +233,23 @@ def build_graph(
     return g._replace(a_place=a_place)
 
 
+def broadcast_skeleton(skel: JointGraph, a_place: np.ndarray) -> JointGraph:
+    """Broadcast one skeleton against an ``(N, max_ops, max_hw)`` placement batch.
+
+    Every placement-invariant field becomes a zero-copy broadcast view along
+    the new batch axis (read-only — copy before mutating); only ``a_place``
+    carries per-candidate data.  This is the single-materialization contract
+    behind ``build_graph_batch`` and the cross-query merge path, which reuses
+    LRU-cached skeletons instead of re-featurizing.
+    """
+    a_place = np.asarray(a_place)
+    n = a_place.shape[0]
+    return JointGraph(
+        *[np.broadcast_to(np.asarray(x), (n,) + np.asarray(x).shape) for x in skel[:-1]],
+        a_place=a_place,
+    )
+
+
 def build_graph_batch(
     query: Query,
     cluster: Cluster,
@@ -244,83 +261,66 @@ def build_graph_batch(
 
     ``assignments`` is an ``(N, n_ops)`` int matrix (``assignments[c, op_id]``
     = host of ``op_id`` in candidate ``c``).  The skeleton is materialized
-    once; every placement-invariant field is a zero-copy broadcast view along
-    the new batch axis (read-only — copy before mutating), and only
-    ``a_place`` is written per candidate.  Equivalent to
+    once and broadcast (``broadcast_skeleton``); only ``a_place`` is written
+    per candidate.  Equivalent to
     ``batch_graphs([build_graph(q, c, Placement.of(row)) for row in a])`` but
     O(1) featurization passes instead of O(N).
     """
     assignments = np.asarray(assignments, dtype=np.int64)
     assert assignments.ndim == 2 and assignments.shape[1] == query.n_ops(), assignments.shape
-    n = assignments.shape[0]
     g = build_graph_skeleton(query, cluster, max_ops, max_hw)
-    a_place = build_a_place_batch(query, cluster, assignments, max_ops, max_hw)
-    return JointGraph(
-        *[np.broadcast_to(x, (n,) + x.shape) for x in g[:-1]],
-        a_place=a_place,
-    )
+    return broadcast_skeleton(g, build_a_place_batch(query, cluster, assignments, max_ops, max_hw))
 
 
 def batch_graphs(graphs: List[JointGraph]) -> JointGraph:
     return JointGraph(*[np.stack([getattr(g, f) for g in graphs]) for f in JointGraph._fields])
 
 
-# Padding / shape-bucket policy shared with the training pipeline lives in
-# core/bucketing.py; re-exported here because the graph layout and its
-# padding contract are one interface.
-from repro.core.bucketing import bucket_size, pad_batch  # noqa: E402,F401
+class BroadcastBatch(NamedTuple):
+    """Several per-query graph batches merged along the shared batch axis.
 
-
-class BatchBanding(NamedTuple):
-    """Static stage-3 plan for a *bucket* of graphs in the depth-major layout.
-
-    ``levels`` holds, for every depth ``d >= 1`` at which ANY graph of the
-    bucket has an operator, the tuple ``(d, (start, stop), parent_rows)``:
-
-    * ``(start, stop)`` — conservative row span covering every bucket graph's
-      depth-``d`` rows.  Rows outside the span are provably never selected at
-      depth ``d`` for any graph in the bucket, so the message-passing step can
-      statically skip their dense work (``kernels/mp_update``'s ``row_span``);
-    * ``parent_rows`` — exclusive upper bound on the rows that feed messages
-      into the span: ``a_flow[u, v] == 0`` for every ``u >= parent_rows`` and
-      every selected ``v``, across the whole bucket (the kernel's contraction
-      bound).
-
-    Being a tuple-of-ints NamedTuple it is hashable and serves as the static
-    jit-cache key for the bucketed training step: one trace per bucket, and
-    the scan runs ``len(levels)`` banded steps instead of MAX_DEPTH full-width
-    ones.  The banding is *conservative*: valid for every sub-batch drawn from
-    the bucket (padding included, since padded rows repeat bucket graphs).
+    ``graphs`` is one ordinary batched ``JointGraph`` — every member shares
+    the canonical depth-major padded layout, so batches from *different*
+    query structures concatenate directly — and ``sizes`` remembers each
+    source batch's row count so fused answers can be split back per request.
     """
 
-    levels: Tuple[Tuple[int, Tuple[int, int], int], ...]
+    graphs: JointGraph
+    sizes: Tuple[int, ...]
 
 
-def batch_banding(g: JointGraph) -> BatchBanding:
-    """Host-side (numpy) banding for a batched graph — see ``BatchBanding``.
+def merge_graph_batches(batches: List[JointGraph]) -> BroadcastBatch:
+    """Concatenate per-query batches (broadcast views included) into ONE batch.
 
-    Computed once per (n_ops, depth) bucket at dataset-bucketing time, NOT per
-    batch: all batches of one bucket must share the static plan or the jitted
-    step would retrace per batch.
+    The cross-query serving primitive: N distinct requests' graphs become one
+    shared padded batch whose single stacked forward replaces N per-structure
+    forwards (``CostEstimator.estimate_many`` / ``score_many``).  Broadcast
+    views from ``broadcast_skeleton`` are materialized here, once, at merge
+    time.
     """
-    depth = np.asarray(g.op_depth)
-    mask = np.asarray(g.op_mask) > 0
-    flow = np.asarray(g.a_flow)
-    if depth.ndim == 1:  # single graph: treat as a one-element bucket
-        depth, mask, flow = depth[None], mask[None], flow[None]
-    active = depth * mask
-    levels = []
-    for d in range(1, int(active.max(initial=0)) + 1):
-        sel = (depth == d) & mask  # (B, N)
-        if not sel.any():
-            continue
-        rows = np.flatnonzero(sel.any(axis=0))
-        span = (int(rows[0]), int(rows[-1]) + 1)
-        # parents of any selected row, over the whole bucket
-        parents = np.flatnonzero((flow * sel[:, None, :]).any(axis=(0, 2)))
-        parent_rows = int(parents[-1]) + 1 if parents.size else 1
-        levels.append((d, span, parent_rows))
-    return BatchBanding(levels=tuple(levels))
+    assert batches, "no batches to merge"
+    sizes = tuple(int(np.asarray(b.op_x).shape[0]) for b in batches)
+    merged = JointGraph(
+        *[
+            np.concatenate([np.asarray(getattr(b, f)) for b in batches], axis=0)
+            for f in JointGraph._fields
+        ]
+    )
+    return BroadcastBatch(graphs=merged, sizes=sizes)
+
+
+# Padding / shape-bucket / stage-3 banding policy shared with the training
+# pipeline lives in core/bucketing.py; re-exported here because the graph
+# layout and its padding + banding contracts are one interface.
+from repro.core.bucketing import (  # noqa: E402,F401
+    BatchBanding,
+    batch_banding,
+    batch_signature,
+    bucket_size,
+    exact_banding,
+    exact_banding_cached,
+    pad_batch,
+)
 
 
 # -- ablation transforms (Exp 7a) ----------------------------------------------

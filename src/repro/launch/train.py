@@ -89,7 +89,17 @@ def _train_one(
         tr,
         va,
         cfg,
-        TrainConfig(epochs=epochs, batch_size=512, lr=1.5e-3, seed=seed, verbose=verbose),
+        # signature-exact bands: these fixed corpora dwarf the batch size, so
+        # the extra per-signature traces amortize and every step runs
+        # row-trimmed stage-3 spans (benchmarks/training_bench.py)
+        TrainConfig(
+            epochs=epochs,
+            batch_size=512,
+            lr=1.5e-3,
+            seed=seed,
+            verbose=verbose,
+            exact_banding=True,
+        ),
     )
     artifacts.save_cost_model(
         name,
@@ -117,7 +127,7 @@ def export_main_bundle(epochs: int):
     """Assemble the five per-metric ensembles into the ONE versioned serving
     artifact (repro.serve.CostModelBundle) the online path loads; the loose
     per-metric checkpoints stay as the resumable training artifacts."""
-    from repro.serve.bundle import CostModelBundle
+    from repro.serve.bundle import CostModelBundle, corpus_fingerprint
 
     if artifacts.bundle_exists("main"):
         print("[skip] bundle main")
@@ -133,6 +143,9 @@ def export_main_bundle(epochs: int):
             "corpus_seed": CORPUS_SEED,
             "split_seed": SPLIT_SEED,
             "corpus_size": MAIN_CORPUS,
+            # provenance: CostEstimator.from_bundle(corpus_fingerprint=...)
+            # warns when served against data from a different corpus
+            "corpus_fingerprint": corpus_fingerprint(main_corpus()),
             "epochs": epochs,
         },
     )

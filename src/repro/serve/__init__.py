@@ -14,7 +14,9 @@ from repro.serve.bundle import (
     BUNDLE_SCHEMA_VERSION,
     BundleVersionError,
     CostModelBundle,
+    LazyModels,
     bundle_from_checkpoint,
+    corpus_fingerprint,
     layout_descriptor,
     merge_bundles,
 )
@@ -26,9 +28,11 @@ __all__ = [
     "BundleVersionError",
     "CostModelBundle",
     "CostEstimator",
+    "LazyModels",
     "PlacementService",
     "ServiceStats",
     "bundle_from_checkpoint",
+    "corpus_fingerprint",
     "layout_descriptor",
     "merge_bundles",
 ]

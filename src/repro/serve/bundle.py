@@ -27,8 +27,10 @@ The manifest pins two compatibility contracts, checked on ``load``:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -117,8 +119,17 @@ class CostModelBundle:
         return save_checkpoint(directory, 0, state, extra=manifest, keep=1)
 
     @classmethod
-    def load(cls, directory: str) -> "CostModelBundle":
-        """Load a bundle, refusing incompatible schema/layout versions."""
+    def load(cls, directory: str, lazy: bool = True) -> "CostModelBundle":
+        """Load a bundle, refusing incompatible schema/layout versions.
+
+        The manifest (configs, meta, compatibility contracts) is always read
+        eagerly; with ``lazy=True`` (the default) each metric's ensemble
+        params are deserialized from ``arrays.npz`` on first access instead —
+        a many-metric bundle serving a latency-only workload never pays for
+        the filters' weights.  ``CostEstimator`` preserves the laziness;
+        anything that walks ``models.items()`` (``save``, ``merge_bundles``)
+        simply forces the load.
+        """
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no bundle under {directory}")
@@ -127,6 +138,8 @@ class CostModelBundle:
             manifest = json.load(f)["extra"]
         _check_compatible(manifest, directory)
         cfgs = {m: _config_from_manifest(spec) for m, spec in manifest["configs"].items()}
+        if lazy:
+            return cls(models=LazyModels(step_dir, cfgs), meta=manifest.get("meta", {}))
         like = {m: init_cost_model(jax.random.PRNGKey(0), cfg) for m, cfg in cfgs.items()}
         state, _, _ = restore_checkpoint(directory, like, step=step)
         assert state is not None, f"bundle manifest without arrays under {directory}"
@@ -155,6 +168,82 @@ def _check_compatible(manifest: Dict, directory: str) -> None:
         )
 
 
+def _params_from_npz(npz_path: str, prefix: str, cfg: CostModelConfig, origin: str):
+    """Deserialize one ensemble's params from the ``prefix``-keyed npz leaves.
+
+    ``np.load`` only decompresses the members actually read, so pulling one
+    metric out of a many-metric ``arrays.npz`` costs that metric's bytes —
+    the mechanism behind both lazy bundle loading (prefix = metric name) and
+    checkpoint export (prefix = ``"0"``, the params element of the training
+    step state).
+    """
+    like = init_cost_model(jax.random.PRNGKey(0), cfg)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    with np.load(npz_path) as data:
+        files = set(data.files)
+        for pth, leaf in leaves_with_paths:
+            key = prefix + SEP + SEP.join(_path_str(p) for p in pth)
+            if key not in files:
+                raise KeyError(f"{origin} lacks params leaf {key}")
+            arr = data[key]
+            want = np.asarray(leaf)
+            if tuple(arr.shape) != tuple(want.shape):
+                raise ValueError(
+                    f"params shape mismatch for {key}: stored {arr.shape} vs "
+                    f"config {want.shape} — wrong CostModelConfig for {origin}"
+                )
+            new_leaves.append(arr.astype(want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class LazyModels(Mapping):
+    """Read-only metric -> (params, cfg) mapping that defers array loading.
+
+    Keys (and therefore ``bundle.metrics`` / ``estimator.metrics``) come from
+    the eagerly-read manifest; a metric's params hit disk on its first
+    ``[]``.  Loaded entries are kept, so repeated access is a dict lookup.
+    """
+
+    def __init__(self, step_dir: str, cfgs: Dict[str, CostModelConfig]):
+        self._npz_path = os.path.join(step_dir, "arrays.npz")
+        self._cfgs = dict(cfgs)
+        self._loaded: Dict[str, Tuple[object, CostModelConfig]] = {}
+
+    def __getitem__(self, metric: str) -> Tuple[object, CostModelConfig]:
+        hit = self._loaded.get(metric)
+        if hit is None:
+            cfg = self._cfgs[metric]  # raises KeyError for unknown metrics
+            params = _params_from_npz(
+                self._npz_path, metric, cfg, f"bundle arrays at {self._npz_path}"
+            )
+            hit = self._loaded[metric] = (params, cfg)
+        return hit
+
+    def __iter__(self):
+        return iter(self._cfgs)
+
+    def __len__(self) -> int:
+        return len(self._cfgs)
+
+
+def corpus_fingerprint(traces) -> str:
+    """Stable digest of a training corpus (size + every trace's labels).
+
+    Recorded in bundle meta by the training driver and checked (with a
+    warning, not an error — retraining on refreshed labels is legitimate) by
+    ``CostEstimator.from_bundle`` so a bundle served against the wrong
+    corpus' evaluation data is caught at load time, not in a q-error plot.
+    """
+    h = hashlib.sha256(str(len(traces)).encode())
+    for t in traces:
+        for k, v in sorted(t.labels.as_dict().items()):
+            h.update(k.encode())
+            h.update(np.float64(v).tobytes())
+    return h.hexdigest()[:16]
+
+
 def bundle_from_checkpoint(
     ckpt_dir: str, cfg: CostModelConfig, meta: Optional[Dict] = None
 ) -> CostModelBundle:
@@ -171,28 +260,18 @@ def bundle_from_checkpoint(
     if step is None:
         raise FileNotFoundError(f"no training checkpoint under {ckpt_dir}")
     step_dir = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with np.load(os.path.join(step_dir, "arrays.npz")) as data:
-        arrays = {k: data[k] for k in data.files if k.startswith("0" + SEP)}
-    like = init_cost_model(jax.random.PRNGKey(0), cfg)
-    leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
-    treedef = jax.tree_util.tree_structure(like)
-    new_leaves = []
-    for pth, leaf in leaves_with_paths:
-        key = "0" + SEP + SEP.join(_path_str(p) for p in pth)
-        if key not in arrays:
-            raise KeyError(
-                f"checkpoint at {ckpt_dir} lacks params leaf {key}; was it "
-                "written by train_cost_model (state = (params, opt_state, ef))?"
-            )
-        arr = arrays[key]
-        want = np.asarray(leaf)
-        if tuple(arr.shape) != tuple(want.shape):
-            raise ValueError(
-                f"params shape mismatch for {key}: checkpoint {arr.shape} vs "
-                f"config {want.shape} — wrong CostModelConfig for this checkpoint"
-            )
-        new_leaves.append(arr.astype(want.dtype))
-    params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    try:
+        params = _params_from_npz(
+            os.path.join(step_dir, "arrays.npz"),
+            "0",
+            cfg,
+            f"checkpoint at {ckpt_dir}",
+        )
+    except KeyError as e:
+        raise KeyError(
+            f"{e.args[0]}; was it written by train_cost_model "
+            "(state = (params, opt_state, ef))?"
+        ) from None
     return CostModelBundle(
         models={cfg.metric: (params, cfg)},
         meta={"exported_from": os.path.abspath(ckpt_dir), "step": int(step), **(meta or {})},

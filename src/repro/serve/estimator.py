@@ -28,24 +28,29 @@ engine internals.
 
 from __future__ import annotations
 
+import warnings
 from collections import OrderedDict
+from collections.abc import Mapping
 from functools import lru_cache
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gnn import apply_gnn_placed, apply_gnn_placed_stacked
+from repro.core.bucketing import BatchBanding, exact_banding_cached
+from repro.core.gnn import apply_gnn_merged, apply_gnn_placed, apply_gnn_placed_stacked
 from repro.core.graph import (
     JointGraph,
     QueryStatic,
     batch_graphs,
+    broadcast_skeleton,
     bucket_size,
     build_a_place_batch,
     build_graph,
     build_graph_batch,
     build_graph_skeleton,
+    merge_graph_batches,
     pad_batch,
     query_static,
     skeleton_cache_key,
@@ -72,11 +77,18 @@ def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
 
 
-@lru_cache(maxsize=64)
-def _jitted_forward_stacked(gnn, traditional_mp: bool, lowering: str = "ref"):
-    # metric only selects the loss/vote, never the forward; any metric works
+@lru_cache(maxsize=128)
+def _jitted_forward_stacked(
+    gnn,
+    traditional_mp: bool,
+    banding: Optional[BatchBanding] = None,
+    lowering: str = "ref",
+):
+    # metric only selects the loss/vote, never the forward; any metric works.
+    # ``banding`` is the merged batch's static signature-exact stage-3 plan
+    # (None: full-depth scan) — part of the trace key, like a shape.
     cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
-    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
+    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg, banding))
 
 
 @lru_cache(maxsize=256)
@@ -95,6 +107,16 @@ def _jitted_placed_forward_stacked(
 ):
     def f(p, skel, a_place):
         return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw)
+
+    return jax.jit(f)
+
+
+@lru_cache(maxsize=128)
+def _jitted_merged_forward(gnn, banding: BatchBanding, max_parents: int, lowering: str = "ref"):
+    # the cross-query engine: S deduped skeletons + per-row (skel_id,
+    # a_place); banding is the drain's signature-exact static plan
+    def f(p, skels, skel_id, a_place):
+        return apply_gnn_merged(p, skels, skel_id, a_place, gnn, banding, max_parents)
 
     return jax.jit(f)
 
@@ -172,15 +194,46 @@ class CostEstimator:
     skeleton_cache_size = 64  # (query, cluster) pairs kept device-resident
 
     def __init__(self, models: Dict[str, Tuple[object, CostModelConfig]], meta=None):
-        self.models = dict(models)
+        # plain dicts are copied (callers may mutate theirs); other Mappings
+        # (bundle.LazyModels) pass through so laziness survives the facade
+        self.models = dict(models) if type(models) is dict else models
+        assert isinstance(self.models, Mapping), type(models)
         self.meta = dict(meta or {})
-        self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, QueryStatic]]" = OrderedDict()
+        self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, JointGraph, QueryStatic]]" = (
+            OrderedDict()
+        )
         self._stacked: Dict[Tuple[str, ...], Optional[StackedEnsembles]] = {}
+        # cross-query drain mixes: structure-key tuple -> (device skeleton
+        # stack, banding, max_parents).  A recurring mix (the steady state of
+        # a monitoring loop) re-enters with zero stacking/banding/transfer.
+        self._merged_groups: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self._optimizer = None
 
     @classmethod
-    def from_bundle(cls, bundle) -> "CostEstimator":
-        return cls(bundle.models, meta=bundle.meta)
+    def from_bundle(cls, bundle, corpus_fingerprint: Optional[str] = None) -> "CostEstimator":
+        """Facade over a bundle's models (laziness preserved).
+
+        ``corpus_fingerprint`` (see ``bundle.corpus_fingerprint``) is the
+        caller's expectation of the corpus the models were trained on; when
+        both it and the bundle's recorded ``meta["corpus_fingerprint"]``
+        exist and disagree, a warning flags the provenance mismatch — the
+        models still serve (retraining on refreshed labels is legitimate),
+        but silently comparing them against the wrong corpus is not.
+        """
+        meta = bundle.meta or {}
+        recorded = meta.get("corpus_fingerprint")
+        if (
+            corpus_fingerprint is not None
+            and recorded is not None
+            and recorded != corpus_fingerprint
+        ):
+            warnings.warn(
+                f"bundle was trained on corpus {recorded!r} but the caller "
+                f"expects {corpus_fingerprint!r}; predictions are served "
+                "against data the models never saw (provenance mismatch)",
+                stacklevel=2,
+            )
+        return cls(bundle.models, meta=meta)
 
     @property
     def metrics(self) -> Tuple[str, ...]:
@@ -221,7 +274,7 @@ class CostEstimator:
                 for m in metrics
             }
         fwd = _jitted_forward_stacked(
-            stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, active_lowering()
+            stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, None, active_lowering()
         )
         return _split_votes(np.asarray(fwd(stacked.params, g)), stacked)
 
@@ -232,19 +285,35 @@ class CostEstimator:
 
     # -- placement scoring --------------------------------------------------------
 
-    def _skeleton_for(self, query, cluster) -> Tuple[JointGraph, QueryStatic]:
-        """Cached (device-resident skeleton, QueryStatic) for one pair."""
-        key = skeleton_cache_key(query, cluster)
+    def _skeleton_entry(
+        self, query, cluster, key: Optional[Tuple] = None
+    ) -> Tuple[JointGraph, JointGraph, QueryStatic]:
+        """Cached (host skeleton, device skeleton, QueryStatic) for one pair.
+
+        The host copy feeds the cross-query merge path (merging concatenates
+        on the host before ONE device transfer); the device copy feeds the
+        placed per-structure forwards.  Both ride the same LRU entry, so
+        either path's hit warms the other.  ``key`` lets callers that already
+        computed ``skeleton_cache_key`` (the service computes it at submit
+        time) skip recomputing it — the key build is the most expensive host
+        step on a warm cache."""
+        if key is None:
+            key = skeleton_cache_key(query, cluster)
         hit = self._skeletons.get(key)
         if hit is not None:
             self._skeletons.move_to_end(key)
             return hit
-        skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(query, cluster))
-        entry = (skel, query_static(query))
+        host = build_graph_skeleton(query, cluster)
+        entry = (host, jax.tree_util.tree_map(jnp.asarray, host), query_static(query))
         self._skeletons[key] = entry
         while len(self._skeletons) > self.skeleton_cache_size:
             self._skeletons.popitem(last=False)
         return entry
+
+    def _skeleton_for(self, query, cluster) -> Tuple[JointGraph, QueryStatic]:
+        """Cached (device-resident skeleton, QueryStatic) for one pair."""
+        _, dev, static = self._skeleton_entry(query, cluster)
+        return dev, static
 
     def _stacked_for(self, metrics: Tuple[str, ...]) -> Optional[StackedEnsembles]:
         """Fused ensemble stack for ``metrics``, or None if not fusable."""
@@ -321,6 +390,263 @@ class CostEstimator:
         return self.scorer(query, cluster, metrics)(
             np.asarray(assignments, dtype=np.int64)
         )
+
+    # -- cross-query broadcast batches -------------------------------------------
+
+    def supports_cross_query(self, metrics: Optional[Sequence[str]] = None) -> bool:
+        """Whether ``metrics`` can ride one merged cross-query forward.
+
+        Requires a fusable ensemble stack (shape-identical GNN configs) with
+        the 3-stage structure (``traditional_mp`` ablation models aggregate
+        over rounds, not stages, and keep their per-graph path).
+        ``estimate_many``/``score_many`` fall back to per-request answers when
+        this is False — the service uses it to route and count honestly.
+        """
+        metrics = tuple(metrics) if metrics is not None else tuple(self.models)
+        stacked = self._stacked_for(metrics)
+        return stacked is not None and not stacked.cfgs[0].traditional_mp
+
+    def _merged_forward(
+        self,
+        merged: JointGraph,
+        sizes: Sequence[int],
+        metrics: Tuple[str, ...],
+        max_rows: Optional[int],
+    ) -> List[Dict[str, np.ndarray]]:
+        """One stacked forward per ``max_rows`` chunk of a merged host batch.
+
+        Each chunk is bucket-padded (shape stability) and gets the
+        signature-exact row-trimmed banding of the structures it actually
+        contains (cached by signature hash — a recurring request mix reuses
+        its plan AND its jit trace), so stage-3 work tracks real rows rather
+        than the widest member.  Answers are split back per source batch.
+        """
+        stacked = self._stacked_for(metrics)
+        total = int(merged.op_x.shape[0])
+        step = max_rows if max_rows else total
+        parts: List[Dict[str, np.ndarray]] = []
+        fields = [np.asarray(x) for x in merged]
+        for s in range(0, total, step):
+            chunk = JointGraph(*[x[s : s + step] for x in fields])
+            n = int(chunk.op_x.shape[0])
+            chunk = pad_batch(chunk, bucket_size(n))
+            banding = exact_banding_cached(chunk)
+            fwd = _jitted_forward_stacked(
+                stacked.cfgs[0].gnn, False, banding, active_lowering()
+            )
+            raw = np.asarray(fwd(stacked.params, jax.tree_util.tree_map(jnp.asarray, chunk)))
+            parts.append({m: v[:n] for m, v in _split_votes(raw, stacked).items()})
+        merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+        out, off = [], 0
+        for size in sizes:
+            out.append({m: merged_out[m][off : off + size] for m in metrics})
+            off += size
+        return out
+
+    def estimate_many(
+        self,
+        batches: Sequence,
+        metrics: Optional[Sequence[str]] = None,
+        max_rows: Optional[int] = None,
+    ) -> List[Dict[str, np.ndarray]]:
+        """``estimate`` for N independent batches through ONE fused forward.
+
+        ``batches`` entries are batched ``JointGraph``s (single graphs are
+        promoted) or trace sequences; structures may differ freely — every
+        graph shares the canonical padded layout, so the batches concatenate
+        along the batch axis (``graph.merge_graph_batches``) and one
+        kernel-routed stacked forward per ``max_rows`` chunk answers
+        everything.  Returns one metric -> predictions dict per input batch,
+        order-aligned.
+        """
+        metrics = tuple(metrics) if metrics is not None else tuple(self.models)
+        batches = list(batches)
+        if not batches:
+            return []
+        host = []
+        for b in batches:
+            g = jax.tree_util.tree_map(np.asarray, self._as_graphs(b))
+            if g.op_x.ndim == 2:  # single graph: promote to a batch of one
+                g = jax.tree_util.tree_map(lambda x: x[None], g)
+            host.append(g)
+        if sum(int(g.op_x.shape[0]) for g in host) == 0:
+            raise ValueError("no graphs to estimate")
+        if not self.supports_cross_query(metrics):
+            # heterogeneous / ablation configs: per-batch fallback, chunked
+            # and bucket-padded exactly like the merged path
+            out: List[Optional[Dict[str, np.ndarray]]] = []
+            for g in host:
+                total = int(g.op_x.shape[0])
+                if total == 0:  # empty member: filled in below, like the
+                    out.append(None)  # merged path's zero-width slice
+                    continue
+                step = max_rows if max_rows else total
+                parts = []
+                for s in range(0, total, step):
+                    chunk = jax.tree_util.tree_map(lambda x: x[s : s + step], g)
+                    n = int(chunk.op_x.shape[0])
+                    scored = self.estimate(pad_batch(chunk, bucket_size(n)), metrics)
+                    parts.append({m: v[:n] for m, v in scored.items()})
+                out.append({m: np.concatenate([p[m] for p in parts]) for m in metrics})
+            template = next(o for o in out if o is not None)
+            return [o if o is not None else {m: template[m][:0] for m in metrics} for o in out]
+        merged, sizes = merge_graph_batches(host)
+        return self._merged_forward(merged, sizes, metrics, max_rows)
+
+    def score_many(
+        self,
+        requests: Sequence[Tuple],
+        metrics: Optional[Sequence[str]] = None,
+        max_rows: Optional[int] = None,
+        keys: Optional[Sequence[Tuple]] = None,
+    ) -> List[Dict[str, np.ndarray]]:
+        """``score`` for N distinct (query, cluster, assignments) requests
+        through ONE fused forward.
+
+        The serving hot path for a heterogeneous request stream: requests
+        are regrouped structure-major, each structure contributing its
+        LRU-cached skeleton ONCE (zero featurization passes warm) plus all
+        its candidate rows, and a single stacked ``apply_gnn_merged`` forward
+        per ``max_rows`` chunk scores every (metric, member, candidate)
+        triple — O(1) forwards per drain instead of O(#structures), with
+        stage work proportional to real rows (the drain's signature-exact
+        banding).  ``keys`` optionally carries precomputed
+        ``skeleton_cache_key``s (the service computes them at submit).
+        Returns one metric -> (N_i,) dict per request, order-aligned; answers
+        equal per-request ``score`` to float tolerance (the merged engine and
+        the placement-specialized engine are the same math in different
+        association orders).  ``use_pallas`` models take the dense broadcast
+        path instead (the kernels own their tiling; the gather formulation is
+        the CPU fast path).
+        """
+        metrics = tuple(metrics) if metrics is not None else tuple(self.models)
+        requests = list(requests)
+        if not requests:
+            return []
+        if not self.supports_cross_query(metrics):
+            return [self.score(q, c, a, metrics) for q, c, a in requests]
+        stacked = self._stacked_for(metrics)
+        if keys is None:
+            keys = [skeleton_cache_key(q, c) for q, c, _ in requests]
+
+        # regroup structure-major: one skeleton + one concatenated candidate
+        # block per structure; remember each request's slice for the split
+        groups: "OrderedDict[Tuple, List[int]]" = OrderedDict()
+        mats = []
+        for i, (q, c, a) in enumerate(requests):
+            a = np.asarray(a, dtype=np.int64)
+            if len(a) == 0:  # not assert: the service relies on it under -O
+                raise ValueError("no candidates to score")
+            mats.append(a)
+            groups.setdefault(keys[i], []).append(i)
+
+        if stacked.cfgs[0].gnn.use_pallas:
+            # dense broadcast batch through the kernel-routed stacked engine
+            pieces = []
+            for key, idxs in groups.items():
+                q, c, _ = requests[idxs[0]]
+                host, _, _ = self._skeleton_entry(q, c, key)
+                pieces.append(
+                    broadcast_skeleton(
+                        host,
+                        build_a_place_batch(q, c, np.concatenate([mats[i] for i in idxs])),
+                    )
+                )
+            merged, _ = merge_graph_batches(pieces)
+            sizes = [sum(len(mats[i]) for i in idxs) for idxs in groups.values()]
+            per_group = self._merged_forward(merged, sizes, metrics, max_rows)
+        else:
+            index_of, skels_dev, banding, max_parents = self._merged_group_for(
+                requests, groups
+            )
+            blocks, ids = [], []
+            for key, idxs in groups.items():
+                q, c, _ = requests[idxs[0]]
+                block = build_a_place_batch(q, c, np.concatenate([mats[i] for i in idxs]))
+                blocks.append(block)
+                ids.append(np.full(len(block), index_of[key], dtype=np.int32))
+            skel_id = np.concatenate(ids) if len(ids) > 1 else ids[0]
+            a_place = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
+            per_group = self._merged_placements_forward(
+                skels_dev, banding, max_parents, skel_id, a_place,
+                [len(b) for b in blocks], stacked, metrics, max_rows,
+            )
+        # split each structure's block back onto its requests, in order
+        out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(requests)
+        for g_out, idxs in zip(per_group, groups.values()):
+            off = 0
+            for i in idxs:
+                n = len(mats[i])
+                out[i] = {m: g_out[m][off : off + n] for m in metrics}
+                off += n
+        return out
+
+    def _merged_group_for(self, requests, groups) -> Tuple:
+        """(key -> skeleton index, device skeleton stack, banding,
+        max_parents) for one drain mix.
+
+        Keyed on the *set* of structure keys — drains of one recurring mix
+        arrive in whatever order client threads raced, so the index mapping
+        is part of the entry and callers build ``skel_id`` through it; the
+        mix then pays stacking, banding, and the skeleton device transfer
+        exactly once (the steady state of an online monitoring loop)."""
+        mix_key = frozenset(groups)
+        hit = self._merged_groups.get(mix_key)
+        if hit is not None:
+            self._merged_groups.move_to_end(mix_key)
+            return hit
+        index_of = {key: i for i, key in enumerate(groups)}
+        skels = batch_graphs(
+            [self._skeleton_entry(*requests[idxs[0]][:2], key)[0] for key, idxs in groups.items()]
+        )
+        banding = exact_banding_cached(skels)
+        max_parents = int(np.asarray(skels.a_flow).sum(axis=-2).max(initial=1))
+        entry = (index_of, jax.tree_util.tree_map(jnp.asarray, skels), banding, max_parents)
+        self._merged_groups[mix_key] = entry
+        while len(self._merged_groups) > 32:
+            self._merged_groups.popitem(last=False)
+        return entry
+
+    def _merged_placements_forward(
+        self,
+        skels_dev: JointGraph,
+        banding: BatchBanding,
+        max_parents: int,
+        skel_id: np.ndarray,
+        a_place: np.ndarray,
+        sizes: Sequence[int],
+        stacked: StackedEnsembles,
+        metrics: Tuple[str, ...],
+        max_rows: Optional[int],
+    ) -> List[Dict[str, np.ndarray]]:
+        """Chunked ``apply_gnn_merged`` over a structure-major placement batch.
+
+        The trace is keyed on the participating structures' signature set
+        (via the cached exact banding) and the bucket-padded row count — a
+        recurring drain mix reuses its plan, its jit trace, AND its
+        device-resident skeleton stack (``_merged_group_for``).
+        """
+        fwd = _jitted_merged_forward(
+            stacked.cfgs[0].gnn, banding, max_parents, active_lowering()
+        )
+        total = int(a_place.shape[0])
+        step = max_rows if max_rows else total
+        parts: List[Dict[str, np.ndarray]] = []
+        for s in range(0, total, step):
+            ids, ap = skel_id[s : s + step], a_place[s : s + step]
+            n = len(ids)
+            pad = bucket_size(n) - n
+            if pad:
+                ids = np.concatenate([ids, np.repeat(ids[-1:], pad)])
+                ap = np.concatenate([ap, np.repeat(ap[-1:], pad, axis=0)])
+            raw = np.asarray(fwd(stacked.params, skels_dev, jnp.asarray(ids), jnp.asarray(ap)))
+            parts.append({m: v[:n] for m, v in _split_votes(raw, stacked).items()})
+        merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+        out, off = [], 0
+        for size in sizes:
+            out.append({m: merged_out[m][off : off + size] for m in metrics})
+            off += size
+        return out
 
     def optimize(self, query, cluster, target_metric: str = "latency_p", **kwargs):
         """Cost-based placement search (paper SV): sample -> score -> argopt.

@@ -9,17 +9,27 @@ wake-up — adaptive micro-batching, so while one fused forward runs, new
 requests pile up and form the next batch — and answers each compatible group
 with one bucket-padded stacked forward through the shared estimator:
 
-* ``score`` requests coalesce when they target the same (query structure,
-  cluster, metrics): their assignment matrices are concatenated along the
-  candidate axis, scored once, and split back per request.  Scores are
-  batchmate-independent (the padding-invariance tests pin this), so
+* ``score`` requests coalesce per metrics tuple — including requests for
+  *different* (query, cluster) structures: their placement batches merge
+  structure-major into ONE shared batch (``CostEstimator.score_many``)
+  answered by a single signature-banded merged forward per ``max_batch``
+  chunk.  Merging trades S-1 dispatches for span-conservative stage work, so
+  the drain routes adaptively: dispatch-bound drains (at most
+  ``cross_query_row_limit`` candidate rows per structure on average) merge,
+  compute-bound drains — and single-structure groups — take the
+  placement-specialized per-structure path, which wins its dispatch back in
+  exact per-query stage-3 work.  ``cross_query=False`` pins the pre-merge
+  behavior of one forward per structure (the benchmark baseline).  Scores
+  are batchmate-independent (the padding-invariance tests pin this), so
   coalescing is invisible to callers;
 * ``estimate`` requests coalesce per metrics tuple: every ``JointGraph``
-  shares the same padded layout, so batches concatenate along the batch axis.
+  shares the same padded layout, so batches concatenate along the batch axis
+  (``CostEstimator.estimate_many``).
 
 Throughput economics: each forward pays a fixed dispatch cost that dominates
 these small graphs, so B coalesced requests cost ~1 dispatch instead of B —
-``benchmarks/serve_bench.py`` gates the resulting requests/s win in CI.
+and a heterogeneous stream of S structures costs ~1 dispatch instead of S.
+``benchmarks/serve_bench.py`` gates both wins in CI.
 """
 
 from __future__ import annotations
@@ -33,7 +43,6 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.bucketing import bucket_size, pad_batch
 from repro.core.graph import JointGraph, skeleton_cache_key
 from repro.serve.estimator import CostEstimator
 
@@ -46,9 +55,11 @@ class ServiceStats:
     n_batches: int = 0  # worker wake-ups that executed work
     n_forwards: int = 0  # estimator calls issued (one per group chunk)
     n_coalesced: int = 0  # requests that shared a forward with another
+    n_cross_query: int = 0  # score requests answered via a merged cross-query batch
 
     def reset(self) -> None:
-        self.n_requests = self.n_batches = self.n_forwards = self.n_coalesced = 0
+        self.n_requests = self.n_batches = 0
+        self.n_forwards = self.n_coalesced = self.n_cross_query = 0
 
 
 class _Request(NamedTuple):
@@ -62,10 +73,18 @@ class PlacementService:
     """Coalesces concurrent estimate/score requests into fused forwards.
 
     ``max_batch`` bounds the candidate rows (score) / graphs (estimate) per
-    fused forward — a group beyond it is scored in chunks.  ``auto_start``
-    False leaves the worker stopped so tests (and one-shot batch jobs) can
-    enqueue everything first and then ``start()`` for one deterministic
-    drain.  Use as a context manager or call ``close()`` to stop the worker.
+    fused forward — a group beyond it is scored in chunks.  ``cross_query``
+    (default True) lets score requests for *different* query structures share
+    one merged forward (``CostEstimator.score_many``); False restores the
+    one-forward-per-structure drain.  Merging trades one dispatch for span-
+    conservative stage work, so it pays exactly when drains are
+    dispatch-bound: a drain averaging more than ``cross_query_row_limit``
+    candidate rows per structure has enough work per structure to amortize
+    its own specialized forward and takes the per-structure path instead
+    (None: always merge).  ``auto_start`` False leaves the worker stopped so
+    tests (and one-shot batch jobs) can enqueue everything first and then
+    ``start()`` for one deterministic drain.  Use as a context manager or
+    call ``close()`` to stop the worker.
     """
 
     def __init__(
@@ -73,9 +92,13 @@ class PlacementService:
         estimator: CostEstimator,
         max_batch: int = 1024,
         auto_start: bool = True,
+        cross_query: bool = True,
+        cross_query_row_limit: Optional[int] = 16,
     ):
         self.estimator = estimator
         self.max_batch = int(max_batch)
+        self.cross_query = bool(cross_query)
+        self.cross_query_row_limit = cross_query_row_limit
         self.stats = ServiceStats()
         self._queue: "deque[_Request]" = deque()
         self._cond = threading.Condition()
@@ -144,8 +167,13 @@ class PlacementService:
         """Async ``CostEstimator.score``; resolves to metric -> (N,) scores."""
         metrics = self._resolve_metrics(metrics)
         a = np.asarray(assignments, dtype=np.int64)
-        key = ("score", skeleton_cache_key(query, cluster), metrics)
-        return self._submit(_Request("score", key, (query, cluster, a, metrics), Future()))
+        skel_key = skeleton_cache_key(query, cluster)
+        # cross-query services group on metrics alone — distinct structures
+        # merge at drain time; the structure key rides along for sub-routing
+        key = ("score", metrics) if self.cross_query else ("score", skel_key, metrics)
+        return self._submit(
+            _Request("score", key, (query, cluster, a, metrics, skel_key), Future())
+        )
 
     def submit_estimate(
         self, graphs: JointGraph, metrics: Optional[Sequence[str]] = None
@@ -191,49 +219,113 @@ class PlacementService:
                             r.future.set_exception(e)
 
     def _execute_group(self, reqs: List[_Request]) -> None:
-        n_forwards = 0
         if reqs[0].kind == "score":
-            query, cluster, _, metrics = reqs[0].payload
-            mats = [r.payload[2] for r in reqs]
-            sizes = [len(m) for m in mats]
-            merged = np.concatenate(mats, axis=0)
-            parts = []
-            # max(.., 1): an all-empty group still reaches the estimator so
-            # callers get its meaningful "no candidates" error back
-            for s in range(0, max(len(merged), 1), self.max_batch):
-                parts.append(
-                    self.estimator.score(query, cluster, merged[s : s + self.max_batch], metrics)
-                )
-                n_forwards += 1
-            answers = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+            per_request, n_forwards, n_cross = self._execute_scores(reqs)
         else:
-            metrics = reqs[0].payload[1]
-            graphs = [r.payload[0] for r in reqs]
-            sizes = [int(np.asarray(g.op_x).shape[0]) for g in graphs]
-            merged = jax.tree_util.tree_map(
-                lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0), *graphs
-            )
-            total = sum(sizes)
-            if total == 0:
-                raise ValueError("no graphs to estimate")
-            parts = []
-            # max_batch-chunk like the score path, and bucket-pad each chunk:
-            # coalescing produces arbitrary merged sizes, which would
-            # otherwise each pay a fresh jit trace
-            for s in range(0, total, self.max_batch):
-                chunk = jax.tree_util.tree_map(lambda x: x[s : s + self.max_batch], merged)
-                n = int(chunk.op_x.shape[0])
-                out = self.estimator.estimate(pad_batch(chunk, bucket_size(n)), metrics)
-                parts.append({m: v[:n] for m, v in out.items()})
-                n_forwards += 1
-            answers = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+            per_request, n_forwards, n_cross = self._execute_estimates(reqs)
         # count the work before resolving futures, so a caller woken by
         # result() never observes counters lagging its own answer
         with self._cond:
             self.stats.n_forwards += n_forwards
+            self.stats.n_cross_query += n_cross
             if len(reqs) > 1:
                 self.stats.n_coalesced += len(reqs)
-        off = 0
-        for r, size in zip(reqs, sizes):
-            r.future.set_result({m: answers[m][off : off + size] for m in metrics})
-            off += size
+        # a per-request answer may be an exception (bad request, failed
+        # subgroup): metrics-tuple groups span unrelated callers, so one
+        # request's failure must never fail its batchmates
+        for r, answer in zip(reqs, per_request):
+            if isinstance(answer, BaseException):
+                r.future.set_exception(answer)
+            else:
+                r.future.set_result(answer)
+
+    def _execute_scores(self, reqs: List[_Request]):
+        metrics = reqs[0].payload[3]
+        answers: List[object] = [None] * len(reqs)
+        # bad requests fail individually, they never poison the drain
+        live = []
+        for i, r in enumerate(reqs):
+            if len(r.payload[2]) == 0:
+                answers[i] = ValueError("no candidates to score")
+            else:
+                live.append(i)
+        distinct = {reqs[i].payload[4] for i in live}
+        rows_per_structure = (
+            sum(len(reqs[i].payload[2]) for i in live) / len(distinct) if live else 0.0
+        )
+        n_forwards = n_cross = 0
+        if (
+            self.cross_query
+            and len(distinct) > 1
+            and (
+                self.cross_query_row_limit is None
+                or rows_per_structure <= self.cross_query_row_limit
+            )
+            and self.estimator.supports_cross_query(metrics)
+        ):
+            # the cross-query hot path: merge every structure's placement
+            # batch and answer the whole drain with one signature-banded
+            # merged forward per max_batch rows
+            items = [(reqs[i].payload[0], reqs[i].payload[1], reqs[i].payload[2]) for i in live]
+            merged = self.estimator.score_many(
+                items,
+                metrics,
+                max_rows=self.max_batch,
+                keys=[reqs[i].payload[4] for i in live],  # computed once at submit
+            )
+            for i, ans in zip(live, merged):
+                answers[i] = ans
+            total = sum(len(a) for _, _, a in items)
+            n_forwards = -(-total // self.max_batch)
+            n_cross = len(live)
+        else:
+            # one structure (or merging unsupported / compute-bound): the
+            # placement-specialized per-structure path, candidate matrices
+            # concatenated per skeleton; a failing subgroup fails only its
+            # own requests
+            subgroups: Dict[Tuple, List[int]] = {}
+            for i in live:
+                subgroups.setdefault(reqs[i].payload[4], []).append(i)
+            for idxs in subgroups.values():
+                query, cluster, _, _, _ = reqs[idxs[0]].payload
+                mats = [reqs[i].payload[2] for i in idxs]
+                sizes = [len(m) for m in mats]
+                merged_mat = np.concatenate(mats, axis=0)
+                try:
+                    parts = []
+                    for s in range(0, len(merged_mat), self.max_batch):
+                        parts.append(
+                            self.estimator.score(
+                                query, cluster, merged_mat[s : s + self.max_batch], metrics
+                            )
+                        )
+                        n_forwards += 1
+                    joined = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+                except BaseException as e:
+                    for i in idxs:
+                        answers[i] = e
+                    continue
+                off = 0
+                for i, size in zip(idxs, sizes):
+                    answers[i] = {m: joined[m][off : off + size] for m in metrics}
+                    off += size
+        return answers, n_forwards, n_cross
+
+    def _execute_estimates(self, reqs: List[_Request]):
+        metrics = reqs[0].payload[1]
+        graphs = [r.payload[0] for r in reqs]
+        sizes = [int(np.asarray(g.op_x).shape[0]) for g in graphs]
+        total = sum(sizes)
+        if total == 0:
+            raise ValueError("no graphs to estimate")
+        # estimate_many merges along the batch axis, max_batch-chunks, and
+        # bucket-pads each chunk: coalescing produces arbitrary merged sizes,
+        # which would otherwise each pay a fresh jit trace.  Unmergeable
+        # metrics (heterogeneous / ablation configs) chunk per batch instead,
+        # so count what was actually issued
+        answers = self.estimator.estimate_many(graphs, metrics, max_rows=self.max_batch)
+        if self.estimator.supports_cross_query(metrics):
+            n_forwards = -(-total // self.max_batch)
+        else:
+            n_forwards = sum(-(-n // self.max_batch) for n in sizes if n)
+        return answers, n_forwards, 0

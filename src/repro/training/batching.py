@@ -24,10 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bucketing import batch_banding_cached, exact_banding_cached
 from repro.core.graph import (
     BatchBanding,
     JointGraph,
-    batch_banding,
     batch_graphs,
     build_graph,
 )
@@ -129,9 +129,10 @@ def batches(
 
 @dataclass(frozen=True)
 class BucketSpec:
-    """One (n_ops, depth) bucket: a contiguous row range of the resorted
-    dataset plus its static stage-3 banding (shared by every batch drawn
-    from the bucket — the jit cache key)."""
+    """One bucket: a contiguous row range of the resorted dataset plus its
+    static stage-3 banding (shared by every batch drawn from the bucket — the
+    jit cache key).  Conservative buckets group by (n_ops, depth); exact
+    buckets group by the full per-row (type, depth) signature."""
 
     n_ops: int
     depth: int
@@ -143,37 +144,61 @@ class BucketSpec:
         return self.stop - self.start
 
 
-def bucket_dataset(ds: GraphDataset) -> Tuple[GraphDataset, Tuple[BucketSpec, ...]]:
-    """Stable-sort the dataset by (depth, n_ops) and describe the buckets.
+def bucket_dataset(
+    ds: GraphDataset, exact: bool = False
+) -> Tuple[GraphDataset, Tuple[BucketSpec, ...]]:
+    """Sort the dataset into banding buckets and describe them.
 
     Returns the resorted dataset (one fancy-index pass — per-epoch work then
-    selects contiguous views) and one ``BucketSpec`` per distinct
-    (n_ops, depth) key.
+    selects contiguous views) and one ``BucketSpec`` per bucket.
 
-    Same-depth buckets share one banding, computed over the whole contiguous
-    depth class: measured on CPU, its wider spans cost nothing against the
-    dominant win (scanning ``depth`` levels instead of MAX_DEPTH), while the
-    jitted step then compiles once per *depth class* (~4 traces per corpus)
-    instead of once per (n_ops, depth) pair (~16).  Every sub-batch of the
-    class — padding included — is covered by the shared plan.
+    ``exact=False`` (default): stable-sort by (depth, n_ops), one bucket per
+    distinct (n_ops, depth) key.  Same-depth buckets share one conservative
+    banding, computed over the whole contiguous depth class: measured on CPU,
+    its wider spans cost nothing against the dominant win (scanning ``depth``
+    levels instead of MAX_DEPTH), while the jitted step then compiles once
+    per *depth class* (~4 traces per corpus) instead of once per
+    (n_ops, depth) pair (~16).  Every sub-batch of the class — padding
+    included — is covered by the shared plan.
+
+    ``exact=True``: one bucket per distinct per-row (type, depth)
+    *signature* (``bucketing.batch_signature``), each carrying its
+    signature-exact row-trimmed banding — stage work proportional to real
+    rows, at the cost of one trace per signature (more traces only where
+    signatures actually differ) and per-signature epoch tails.  The right
+    trade for large fixed corpora (``launch/train.py``) where every
+    signature class is much larger than a batch.
+
+    Either way the bandings come from the signature-keyed cache, so repeated
+    bucketing of views over one corpus (train/val splits, re-bucketing per
+    stage) never recomputes a plan.
     """
     if not len(ds):
         return ds, ()
     mask = np.asarray(ds.graphs.op_mask) > 0
     n_ops = mask.sum(axis=-1).astype(np.int64)
     depth = (np.asarray(ds.graphs.op_depth) * mask).max(axis=-1).astype(np.int64)
-    # depth-primary so buckets sharing a banding (= a depth class) stay
-    # contiguous: bucketed_batches draws batches per banding group
-    order = np.lexsort((n_ops, depth))
+    if exact:
+        sig = np.where(mask, np.asarray(ds.graphs.op_depth), -1).astype(np.int64)
+        _, inverse = np.unique(sig, axis=0, return_inverse=True)
+        # secondary keys keep signature classes inside depth-major order
+        order = np.lexsort((inverse, n_ops, depth))
+        class_of = inverse[order]
+    else:
+        # depth-primary so buckets sharing a banding (= a depth class) stay
+        # contiguous: bucketed_batches draws batches per banding group
+        order = np.lexsort((n_ops, depth))
+        class_of = None
     ds = ds.select(order)
     n_ops, depth = n_ops[order], depth[order]
-    shared = {}
-    for d in np.unique(depth):
-        rows = np.flatnonzero(depth == d)  # contiguous after the sort
-        shared[int(d)] = batch_banding(
-            ds.select(slice(int(rows[0]), int(rows[-1]) + 1)).graphs
-        )
-    bounds = np.flatnonzero((np.diff(n_ops) != 0) | (np.diff(depth) != 0))
+    if exact:
+        bounds = np.flatnonzero(np.diff(class_of) != 0)
+    else:
+        bounds = np.flatnonzero((np.diff(n_ops) != 0) | (np.diff(depth) != 0))
+        shared = {}
+        for d in np.unique(depth):
+            rows = np.flatnonzero(depth == d)  # contiguous after the sort
+            shared[int(d)] = _class_banding(ds, int(rows[0]), int(rows[-1]) + 1, exact=False)
     starts = np.concatenate([[0], bounds + 1])
     stops = np.concatenate([bounds + 1, [len(ds)]])
     buckets = tuple(
@@ -182,11 +207,27 @@ def bucket_dataset(ds: GraphDataset) -> Tuple[GraphDataset, Tuple[BucketSpec, ..
             depth=int(depth[a]),
             start=int(a),
             stop=int(b),
-            banding=shared[int(depth[a])],
+            banding=(
+                _class_banding(ds, int(a), int(b), exact=True)
+                if exact
+                else shared[int(depth[a])]
+            ),
         )
         for a, b in zip(starts, stops)
     )
     return ds, buckets
+
+
+def _class_banding(ds: GraphDataset, start: int, stop: int, exact: bool) -> BatchBanding:
+    """Banding for one contiguous class, via the signature-keyed cache.
+
+    Both flavors key on ``bucketing.batch_signature`` — a banding is a pure
+    function of the signature set — so zero-copy views over the same corpus
+    rows (train/val splits, repeated ``bucket_dataset`` calls, merged serving
+    chunks) reuse one cached plan instead of recomputing per view.
+    """
+    g = ds.select(slice(start, stop)).graphs
+    return exact_banding_cached(g) if exact else batch_banding_cached(g)
 
 
 def _banding_groups(buckets: Sequence[BucketSpec]):

@@ -64,6 +64,10 @@ class TrainConfig:
     ckpt_every: int = 200
     resume: bool = False
     compression: Optional[str] = None  # None | "topk" | "int8"
+    # signature-exact row-trimmed stage-3 bands (one trace per distinct query
+    # signature instead of per depth class) — worth it for large fixed
+    # corpora where every signature class dwarfs a batch (launch/train.py)
+    exact_banding: bool = False
     topk_frac: float = 0.05
     early_stop_patience: int = 6
     log_every: int = 50
@@ -97,9 +101,10 @@ def train_cost_model(
     key, init_key = jax.random.split(key)
     params = init_params if init_params is not None else init_cost_model(init_key, model_cfg)
 
-    # bucket once: every epoch then iterates depth-major (n_ops, depth)
-    # buckets whose static banding keys the jitted step's trace cache
-    dataset_train, buckets = bucket_dataset(dataset_train)
+    # bucket once: every epoch then iterates depth-major buckets whose static
+    # banding keys the jitted step's trace cache — (n_ops, depth) classes by
+    # default, per-signature exact bands under ``exact_banding``
+    dataset_train, buckets = bucket_dataset(dataset_train, exact=train_cfg.exact_banding)
     steps_per_epoch = max(1, n_batches(buckets, train_cfg.batch_size))
     total = steps_per_epoch * train_cfg.epochs
     opt = optim.adam(

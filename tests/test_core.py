@@ -249,6 +249,83 @@ def test_training_forward_pallas_matches_jnp(lowering, monkeypatch):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3, rtol=5e-3)
 
 
+@pytest.mark.parametrize("lowering", ["ref", "interpret"])
+def test_trimmed_exact_banding_matches_untrimmed(lowering, monkeypatch):
+    """Signature-exact banding with row trimming must equal BOTH the
+    conservative untrimmed banding and the plain full-depth forward — values
+    AND gradients — under both off-TPU kernel lowerings (training and the
+    merged serving path differentiate/route through the kernels)."""
+    from repro.core import batch_banding, exact_banding
+
+    from repro.training import dataset_from_traces
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1" if lowering == "interpret" else "0")
+    # a deliberately mixed batch (several query structures) so the trim and
+    # the exact spans differ from the conservative plan
+    ds = dataset_from_traces(WorkloadGenerator(seed=21).corpus(24), "latency_p")
+    cons = batch_banding(ds.graphs)
+    exact = exact_banding(ds.graphs)
+    assert exact.rows is not None, "mixed corpus must leave padded rows to trim"
+    assert len(exact.rows) < MAX_OPS
+    g = jax.tree_util.tree_map(jnp.asarray, ds.graphs)
+    y = jnp.asarray(ds.labels)
+    for pallas in (False, True):
+        cfg = CostModelConfig(
+            metric="latency_p", n_ensemble=2, gnn=GNNConfig(hidden=16, use_pallas=pallas)
+        )
+        params = init_cost_model(jax.random.PRNGKey(3), cfg)
+        out_plain = np.asarray(forward_ensemble(params, g, cfg))
+        out_cons = np.asarray(forward_ensemble(params, g, cfg, cons))
+        out_exact = np.asarray(forward_ensemble(params, g, cfg, exact))
+        np.testing.assert_allclose(out_cons, out_plain, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(out_exact, out_plain, rtol=1e-4, atol=1e-5)
+        g_cons = jax.grad(lambda p: ensemble_loss(p, g, y, cfg, cons))(params)
+        g_exact = jax.grad(lambda p: ensemble_loss(p, g, y, cfg, exact))(params)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(g_cons), jax.tree_util.tree_leaves(g_exact)
+        ):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4
+            )
+
+
+def test_exact_banding_trims_and_covers():
+    """The trim keeps exactly the rows active somewhere in the batch (in the
+    depth-clustered order), the type runs tile the trimmed layout, and every
+    depth-d row of every graph falls inside that level's span (in trimmed
+    coordinates), with its parents under the contraction bound."""
+    from repro.core import exact_banding
+    from repro.training import dataset_from_traces
+
+    ds = dataset_from_traces(WorkloadGenerator(seed=23).corpus(30), "latency_p")
+    banding = exact_banding(ds.graphs)
+    mask = np.asarray(ds.graphs.op_mask) > 0
+    depth = np.asarray(ds.graphs.op_depth)
+    types = np.asarray(ds.graphs.op_type)[0]
+    keep = np.flatnonzero(mask.any(axis=0))
+    # same row set, depth-clustered order (mean active depth non-decreasing)
+    assert sorted(banding.rows) == [int(r) for r in keep]
+    means = [depth[:, r][mask[:, r]].mean() for r in banding.rows]
+    assert all(a <= b for a, b in zip(means, means[1:]))
+    assert banding.ranges[0][1] == 0 and banding.ranges[-1][2] == len(keep)
+    for (_, _, stop), (_, start2, _) in zip(banding.ranges, banding.ranges[1:]):
+        assert stop == start2  # runs tile the trimmed order
+    for t, a, b in banding.ranges:
+        assert all(int(types[banding.rows[i]]) == t for i in range(a, b))
+    spans = {d: (span, parents) for d, span, parents in banding.levels}
+    pos = {int(r): i for i, r in enumerate(banding.rows)}
+    for i in range(len(ds)):
+        for d in range(1, int((depth[i] * mask[i]).max()) + 1):
+            rows = [pos[r] for r in np.flatnonzero((depth[i] == d) & mask[i])]
+            if not rows:
+                continue
+            (s, e), parents = spans[d]
+            assert s <= min(rows) and max(rows) < e
+            # every shallower active row (superset of real parents) is bounded
+            shallower = [pos[r] for r in np.flatnonzero((depth[i] < d) & mask[i])]
+            assert all(r < parents for r in shallower)
+
+
 def test_banded_forward_supports_deep_update_banks():
     """Banding must also serve configs the kernels cannot fuse (>2 update
     layers, jnp path): the generic banded step equals the full scan."""

@@ -20,6 +20,7 @@ from repro.core.graph import (
     build_graph,
     build_graph_skeleton,
     query_static,
+    skeleton_cache_key,
 )
 from repro.dsps import WorkloadGenerator
 from repro.dsps.placement import Placement
@@ -252,6 +253,127 @@ def test_score_one_skeleton_build_one_stacked_forward(monkeypatch):
     assert set(s1) == set(s2) == {"latency_p", "success", "backpressure"}
 
 
+def _mixed_requests(n=8, cands=5, seed=43):
+    """n score requests over n DISTINCT (query, cluster) structures."""
+    gen = WorkloadGenerator(seed=seed)
+    rng = np.random.default_rng(seed)
+    out = []
+    kinds = ("linear", "two_way", "three_way")
+    for i in range(n):
+        q = gen.query(kind=kinds[i % len(kinds)], name=f"mix{i}")
+        c = gen.cluster(3 + i % 5)
+        out.append((q, c, sample_assignment_matrix(q, c, cands, rng)))
+    return out
+
+
+def test_score_many_matches_serial_score():
+    """Cross-query coalescing is invisible: score_many over a mixed stream
+    answers each request exactly like a serial per-request score (to float
+    tolerance — the merged generic engine and the placement-specialized
+    engine are the same math in different sweep orders)."""
+    est = CostEstimator(_models())
+    requests = _mixed_requests()
+    serial = [est.score(q, c, a) for q, c, a in requests]
+    merged = est.score_many(requests)
+    assert len(merged) == len(requests)
+    for want, have in zip(serial, merged):
+        for m in want:
+            np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
+    # chunked (max_rows smaller than the merged stream) stays exact too
+    chunked = est.score_many(requests, max_rows=8)
+    for want, have in zip(serial, chunked):
+        for m in want:
+            np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
+
+
+def test_estimate_many_matches_serial_estimate():
+    """Merged estimate batches answer exactly like per-batch estimate."""
+    est = CostEstimator(_models(metrics=("latency_p", "success")))
+    _, g1 = _graphs(n=6, seed=47)
+    _, g2 = _graphs(n=3, seed=53)
+    serial = [est.estimate(g1), est.estimate(g2)]
+    merged = est.estimate_many([g1, g2])
+    for want, have in zip(serial, merged):
+        for m in want:
+            np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
+
+
+def test_mixed_drain_is_one_forward_for_eight_structures(monkeypatch):
+    """Counter-asserted tentpole contract: 8 score requests over 8 DISTINCT
+    query structures, drained together, must issue exactly ONE stacked
+    forward (not one per structure), traced once."""
+    calls = {"stacked": 0}
+    orig = estimator_mod._jitted_merged_forward.__wrapped__
+
+    @estimator_mod.lru_cache(maxsize=128)
+    def counting(*a, **k):
+        calls["stacked"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(estimator_mod, "_jitted_merged_forward", counting)
+    # unique hidden size so the trace cannot come from another test's cache
+    est = CostEstimator(_models(hidden=28))
+    requests = _mixed_requests()
+    assert len({skeleton_cache_key(q, c) for q, c, _ in requests}) == 8
+    svc = PlacementService(est, auto_start=False)
+    futs = [svc.submit_score(q, c, a) for q, c, a in requests]
+    svc.start()
+    answers = [f.result(timeout=120) for f in futs]
+    svc.close()
+    assert all(set(ans) == set(est.models) for ans in answers)
+    assert svc.stats.n_batches == 1, "pre-queued requests must drain in one wake-up"
+    assert svc.stats.n_forwards == 1, "8 distinct structures must share ONE forward"
+    assert svc.stats.n_cross_query == 8
+    assert calls["stacked"] == 1, "the merged forward must be traced exactly once"
+
+
+def test_lazy_bundle_loads_metrics_on_first_use(tmp_path):
+    """load() defers each metric's params to first access; an estimator over
+    a lazy bundle only ever touches the metrics it serves."""
+    from repro.serve import LazyModels
+
+    bundle = CostModelBundle(_models(), meta={"note": "lazy"})
+    d = str(tmp_path / "lazy")
+    bundle.save(d)
+    loaded = CostModelBundle.load(d)
+    assert isinstance(loaded.models, LazyModels)
+    assert loaded.metrics == bundle.metrics  # manifest-only, nothing loaded
+    assert not loaded.models._loaded
+    est = CostEstimator.from_bundle(loaded)
+    _, g = _graphs(n=4, seed=59)
+    est.estimate(g, ["latency_p"])
+    assert set(loaded.models._loaded) == {"latency_p"}, "untouched metrics must stay on disk"
+    # the loaded params equal the eager load bit-for-bit
+    eager = CostModelBundle.load(d, lazy=False)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(loaded.params("latency_p")),
+        jax.tree_util.tree_leaves(eager.params("latency_p")),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_from_bundle_warns_on_corpus_fingerprint_mismatch():
+    """A recorded corpus_fingerprint that disagrees with the caller's is a
+    provenance mismatch: warn (once per call), never silently serve; agreeing
+    or absent fingerprints stay silent."""
+    from repro.serve import corpus_fingerprint
+
+    traces = WorkloadGenerator(seed=61).corpus(6)
+    fp = corpus_fingerprint(traces)
+    assert fp == corpus_fingerprint(list(traces)), "fingerprint must be deterministic"
+    assert fp != corpus_fingerprint(traces[:5])
+    models = _models(metrics=("latency_p",))
+    bundle = CostModelBundle(models, meta={"corpus_fingerprint": fp})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        CostEstimator.from_bundle(bundle)  # no expectation: silent
+        CostEstimator.from_bundle(bundle, corpus_fingerprint=fp)  # agreeing: silent
+        # no recorded fingerprint: nothing to check against
+        CostEstimator.from_bundle(CostModelBundle(models), corpus_fingerprint=fp)
+    with pytest.warns(UserWarning, match="provenance mismatch"):
+        CostEstimator.from_bundle(bundle, corpus_fingerprint=corpus_fingerprint(traces[:5]))
+
+
 # -- deprecation shims ----------------------------------------------------------
 
 
@@ -329,8 +451,10 @@ def test_service_coalesces_score_requests():
 
 
 def test_service_groups_incompatible_requests():
-    """Different (query, cluster) pairs and estimate requests coalesce only
-    within their own group, and all answers stay exact."""
+    """Score and estimate requests coalesce only within their own kind, and
+    all answers stay exact.  Score requests for *different* (query, cluster)
+    structures now share ONE merged cross-query forward (the broadcast-batch
+    path); estimates coalesce per metrics tuple as before."""
     est = CostEstimator(_models())
     q1, c1, reqs1 = _service_inputs(n_requests=2, seed=19)
     q2, c2, reqs2 = _service_inputs(n_requests=2, seed=23)
@@ -349,14 +473,40 @@ def test_service_groups_incompatible_requests():
     refs = [est.score(q1, c1, r) for r in reqs1] + [est.score(q2, c2, r) for r in reqs2]
     for want, have in zip(refs, got):
         for m in want:
-            np.testing.assert_allclose(have[m], want[m], rtol=1e-5, atol=1e-6, err_msg=m)
+            # merged cross-query answers run the generic signature-banded
+            # engine, not the placement-specialized sweep: same math,
+            # different reduction order -> float-level tolerance
+            np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
     # coalesced estimates run at the merged batch shape: float-level
     # reduction-order differences are allowed, semantic ones are not
     np.testing.assert_allclose(got_est["latency_p"], ref_est["latency_p"], rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(got_est2["latency_p"], ref_est["latency_p"], rtol=1e-5, atol=1e-6)
-    # 3 groups: score(q1), score(q2), estimate -- all in one drained batch
-    assert svc.stats.n_forwards == 3
+    # 2 groups: score (q1 + q2 merged cross-query), estimate -- one drain
+    assert svc.stats.n_forwards == 2
     assert svc.stats.n_coalesced == 6
+    assert svc.stats.n_cross_query == 4  # the four score requests merged
+
+
+def test_service_cross_query_off_restores_per_structure_drain():
+    """cross_query=False pins the pre-merge semantics: one forward per
+    (query structure, cluster, metrics) group, identical answers."""
+    est = CostEstimator(_models())
+    q1, c1, reqs1 = _service_inputs(n_requests=2, seed=19)
+    q2, c2, reqs2 = _service_inputs(n_requests=2, seed=23)
+    svc = PlacementService(est, auto_start=False, cross_query=False)
+    futs = [svc.submit_score(q1, c1, r) for r in reqs1]
+    futs += [svc.submit_score(q2, c2, r) for r in reqs2]
+    svc.start()
+    got = [f.result(timeout=60) for f in futs]
+    svc.close()
+    refs = [est.score(q1, c1, r) for r in reqs1] + [est.score(q2, c2, r) for r in reqs2]
+    for want, have in zip(refs, got):
+        for m in want:
+            # per-structure groups take the same placement-specialized path
+            # as the direct facade call: answers are bit-identical
+            np.testing.assert_array_equal(have[m], want[m], err_msg=m)
+    assert svc.stats.n_forwards == 2  # one per structure
+    assert svc.stats.n_cross_query == 0
 
 
 def test_service_delivers_exceptions():
@@ -380,6 +530,29 @@ def test_service_delivers_exceptions():
     svc2.close()
     with pytest.raises(RuntimeError, match="closed before start"):
         orphan.result(timeout=60)
+
+
+def test_bad_request_never_fails_its_batchmates():
+    """Metrics-tuple groups span unrelated callers: an empty (invalid) score
+    request drained together with valid ones — same or different structures —
+    must fail alone while every batchmate gets its exact answer."""
+    est = CostEstimator(_models(metrics=("latency_p",)))
+    good = _mixed_requests(n=3, cands=4, seed=67)
+    q0, c0, a0 = good[0]
+    svc = PlacementService(est, auto_start=False)
+    futs = [svc.submit_score(q, c, a) for q, c, a in good]
+    bad = svc.submit_score(q0, c0, np.zeros((0, a0.shape[1]), dtype=np.int64))
+    svc.start()
+    with pytest.raises(ValueError, match="no candidates"):
+        bad.result(timeout=60)
+    got = [f.result(timeout=60) for f in futs]
+    svc.close()
+    for (q, c, a), have in zip(good, got):
+        want = est.score(q, c, a)
+        np.testing.assert_allclose(
+            have["latency_p"], want["latency_p"], rtol=1e-4, atol=1e-5
+        )
+    assert svc.stats.n_cross_query == 3  # the valid requests still merged
 
 
 def test_service_chunks_oversized_groups():

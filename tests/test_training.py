@@ -212,6 +212,68 @@ def test_bucketed_batches_cover_dataset():
     assert seen == set(label_of)
 
 
+def test_exact_buckets_cover_dataset_with_trimmed_bands():
+    """exact=True bucketing: every sample appears, every bucket holds ONE
+    per-row signature, and its banding is the signature-exact row-trimmed
+    plan (so each batch's stage-3 spans are exact, not depth-class-wide)."""
+    from repro.core.bucketing import batch_signature
+
+    ds = dataset_from_traces(WorkloadGenerator(seed=26).corpus(60), "throughput")
+    ds, buckets = bucket_dataset(ds, exact=True)
+    assert sum(len(b) for b in buckets) == len(ds)
+    sigs = set()
+    for b in buckets:
+        sub = ds.select(slice(b.start, b.stop)).graphs
+        sig = batch_signature(sub)
+        assert len(sig) == 1, "an exact bucket mixes signatures"
+        assert sig not in sigs, "signature split across buckets"
+        sigs.add(sig)
+        mask = np.asarray(sub.op_mask) > 0
+        depth = np.asarray(sub.op_depth)
+        keep = np.flatnonzero(mask.any(axis=0))
+        rows = b.banding.rows if b.banding.rows is not None else tuple(range(depth.shape[1]))
+        assert sorted(rows) in ([int(r) for r in keep], list(range(depth.shape[1])))
+        spans = {d: span for d, span, _ in b.banding.levels}
+        pos = {int(r): i for i, r in enumerate(rows)}
+        for d in range(1, int((depth * mask).max(initial=0)) + 1):
+            rows = [pos[r] for r in np.flatnonzero(((depth == d) & mask).any(axis=0))]
+            s, e = spans[d]
+            assert s <= min(rows) and max(rows) < e
+    # the epoch iterator serves exact buckets unchanged (each its own group)
+    seen = 0
+    for g, y, banding in bucketed_batches(ds, buckets, 16):
+        assert g.op_x.shape[0] == 16 and y.shape == (16,)
+        assert banding in {b.banding for b in buckets}
+        seen += 1
+    assert seen == n_batches(buckets, 16)
+
+
+def test_bucket_banding_cache_reused_across_views():
+    """Re-bucketing views over the same corpus (train/val splits, repeated
+    stages) must hit the signature-keyed banding caches instead of
+    recomputing — for both the conservative and the exact flavor."""
+    import repro.core.bucketing as bucketing_mod
+
+    ds = dataset_from_traces(WorkloadGenerator(seed=28).corpus(40), "latency_p")
+    tr, va, _ = split_dataset(ds, seed=0)
+    bucketing_mod._BANDING_CACHE.clear()
+    _, b1 = bucket_dataset(tr)
+    _, b1x = bucket_dataset(tr, exact=True)
+    n_entries = len(bucketing_mod._BANDING_CACHE)
+    assert n_entries
+    # same rows again (an identical view) -> zero new cache entries, and the
+    # SAME banding objects (identity proves reuse, not recompute-and-equal)
+    _, b2 = bucket_dataset(tr)
+    _, b2x = bucket_dataset(tr, exact=True)
+    assert len(bucketing_mod._BANDING_CACHE) == n_entries
+    assert all(a.banding is b.banding for a, b in zip(b1, b2))
+    assert all(a.banding is b.banding for a, b in zip(b1x, b2x))
+    # a different split over the same corpus reuses every signature it shares
+    _, bv = bucket_dataset(va, exact=True)
+    shared = {b.banding for b in b1x} & {b.banding for b in bv}
+    assert shared, "val split shares structures with train but reused none"
+
+
 def test_bucketed_loss_matches_plain_forward():
     """The banded bucketed forward must equal the generic full-depth forward
     on the same batch (the depth-major layout is an optimization, not a
