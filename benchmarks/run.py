@@ -20,8 +20,8 @@ def main() -> None:
     only = args.only.split(",") if args.only != "all" else None
 
     from benchmarks import exp1_accuracy, exp2_placement, exp3456, exp7_ablations
-    from benchmarks import kernels_bench, placement_bench, roofline_report, serve_bench
-    from benchmarks import training_bench
+    from benchmarks import kernels_bench, load_harness, placement_bench, roofline_report
+    from benchmarks import serve_bench, training_bench
 
     stages = {
         "exp1": exp1_accuracy.main,
@@ -29,6 +29,7 @@ def main() -> None:
         "placement_search": lambda: placement_bench.main(["--quick"]),
         "training_engine": lambda: training_bench.main(["--quick"]),
         "serving": lambda: serve_bench.main(["--quick"]),
+        "load_harness": lambda: load_harness.main(["--quick"]),
         "exp3": exp3456.exp3_interpolation,
         "exp4": exp3456.exp4_extrapolation,
         "exp5": exp3456.exp5_unseen_patterns,

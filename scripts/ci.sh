@@ -38,6 +38,14 @@ echo "== mixed-stream cross-query perf (quick) =="
 python benchmarks/serve_bench.py --mode mixed --quick --min-speedup 2 \
   --baseline benchmarks/baselines/serve_bench_mixed_quick.json --max-regression 0.10
 
+echo "== open-loop load harness (quick) =="
+# sustained-load tail latency: the warmed double-buffered service must keep
+# its open-loop p95 far below the pre-PR cold service at the same calibrated
+# arrival rate (Poisson + bursty schedules, saturation-knee sweep inside),
+# and the ratio must not regress >10% below the recorded baseline
+python benchmarks/load_harness.py --quick --min-ratio 2 \
+  --baseline benchmarks/baselines/load_harness_quick.json --max-regression 0.10
+
 echo "== examples smoke (API drift gate) =="
 # the examples exercise the public train->bundle->serve surface end to end;
 # tiny corpus/epoch settings via --smoke

@@ -20,19 +20,39 @@ from repro.serve.bundle import (
     layout_descriptor,
     merge_bundles,
 )
-from repro.serve.estimator import CostEstimator
-from repro.serve.service import PlacementService, ServiceStats
+from repro.serve.estimator import CostEstimator, DeferredResult
+from repro.serve.load import (
+    KneePoint,
+    LoadReport,
+    bursty_arrivals,
+    find_knee,
+    latency_quantiles,
+    poisson_arrivals,
+    run_open_loop,
+    score_request_stream,
+)
+from repro.serve.service import PlacementService, ServiceOverloadError, ServiceStats
 
 __all__ = [
     "BUNDLE_SCHEMA_VERSION",
     "BundleVersionError",
     "CostModelBundle",
     "CostEstimator",
+    "DeferredResult",
+    "KneePoint",
     "LazyModels",
+    "LoadReport",
     "PlacementService",
+    "ServiceOverloadError",
     "ServiceStats",
     "bundle_from_checkpoint",
+    "bursty_arrivals",
     "corpus_fingerprint",
+    "find_knee",
+    "latency_quantiles",
     "layout_descriptor",
     "merge_bundles",
+    "poisson_arrivals",
+    "run_open_loop",
+    "score_request_stream",
 ]

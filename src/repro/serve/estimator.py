@@ -121,6 +121,36 @@ def _jitted_merged_forward(gnn, banding: BatchBanding, max_parents: int, lowerin
     return jax.jit(f)
 
 
+class DeferredResult:
+    """Device work already dispatched; the host-side finalize is deferred.
+
+    Every ``deferred=True`` facade call runs its host featurization and
+    launches its jitted forwards eagerly (jax dispatch is asynchronous), then
+    returns one of these instead of blocking on the device values.
+    ``result()`` blocks and runs the remaining host work (convert, vote,
+    split back per request).  ``PlacementService`` uses the split to
+    featurize drain N+1 while drain N's device work is still running.
+    """
+
+    __slots__ = ("_finalize", "_value", "_done")
+
+    def __init__(self, finalize):
+        self._finalize = finalize
+        self._done = False
+        self._value = None
+
+    def result(self):
+        if not self._done:
+            self._value = self._finalize()
+            self._finalize = None  # drop captured device buffers
+            self._done = True
+        return self._value
+
+
+def _maybe_defer(finalize, deferred: bool):
+    return DeferredResult(finalize) if deferred else finalize()
+
+
 # -- stateless scoring primitives -------------------------------------------------
 #
 # The numeric cores behind the facade methods AND the core.model deprecation
@@ -159,7 +189,11 @@ def placed_predict(
 
 
 def placed_predict_fused(
-    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
+    stacked: StackedEnsembles,
+    skel: JointGraph,
+    a_place: jax.Array,
+    static: QueryStatic,
+    deferred: bool = False,
 ) -> Dict[str, np.ndarray]:
     """All metrics' ensembles over one query's candidate placements, fused.
 
@@ -167,7 +201,8 @@ def placed_predict_fused(
     member) pair in a single launch per GNN stage, on the trimmed active-slot
     layout; the raw ``(sum_E, B)`` block is then split back per metric and
     voted exactly like ``placed_predict`` (the stacked-vs-loop equivalence
-    test pins this to float tolerance).
+    test pins this to float tolerance).  ``deferred`` dispatches the forward
+    and returns a ``DeferredResult`` whose ``result()`` blocks and splits.
     """
     assert not stacked.cfgs[0].traditional_mp, (
         "use the generic path for traditional_mp models"
@@ -176,7 +211,8 @@ def placed_predict_fused(
     fwd = _jitted_placed_forward_stacked(
         stacked.cfgs[0].gnn, static, n_hw, active_lowering()
     )
-    return _split_votes(np.asarray(fwd(stacked.params, skel, a_place)), stacked)
+    raw = fwd(stacked.params, skel, a_place)
+    return _maybe_defer(lambda: _split_votes(np.asarray(raw), stacked), deferred)
 
 
 # -- the facade -------------------------------------------------------------------
@@ -253,7 +289,9 @@ class CostEstimator:
             )
         return jax.tree_util.tree_map(jnp.asarray, batch)
 
-    def estimate(self, batch, metrics: Optional[Sequence[str]] = None) -> Dict[str, np.ndarray]:
+    def estimate(
+        self, batch, metrics: Optional[Sequence[str]] = None, deferred: bool = False
+    ) -> Dict[str, np.ndarray]:
         """Cost-space predictions for a batch of *placed* queries.
 
         ``batch`` is either a batched ``JointGraph`` or a sequence of traces
@@ -263,20 +301,30 @@ class CostEstimator:
         runs over the same resident batch; shape-identical per-metric configs
         (the COSTREAM default) are additionally fused into ONE stacked
         forward, heterogeneous configs fall back to a per-metric loop.
-        Returns metric -> predictions aligned with the batch.
+        Returns metric -> predictions aligned with the batch (``deferred``:
+        a ``DeferredResult`` resolving to that dict once device work is done).
         """
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
         g = self._as_graphs(batch)
         stacked = self._stacked_for(metrics)
         if stacked is None:  # mixed architectures: per-metric forwards, shared batch
-            return {
-                m: ensemble_predict(self.models[m][0], g, self.models[m][1])
+            lowering = active_lowering()
+            raws = {
+                m: _jitted_forward(self.models[m][1], lowering)(self.models[m][0], g)
                 for m in metrics
             }
+            return _maybe_defer(
+                lambda: {
+                    m: _ensemble_vote(np.asarray(raws[m]), self.models[m][1])
+                    for m in metrics
+                },
+                deferred,
+            )
         fwd = _jitted_forward_stacked(
             stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, None, active_lowering()
         )
-        return _split_votes(np.asarray(fwd(stacked.params, g)), stacked)
+        raw = fwd(stacked.params, g)
+        return _maybe_defer(lambda: _split_votes(np.asarray(raw), stacked), deferred)
 
     def proba(self, batch, metric: str) -> np.ndarray:
         """Mean ensemble probability for one classification metric."""
@@ -324,7 +372,7 @@ class CostEstimator:
                 self._stacked[metrics] = None
         return self._stacked[metrics]
 
-    def scorer(self, query, cluster, metrics: Sequence[str]):
+    def scorer(self, query, cluster, metrics: Sequence[str], deferred: bool = False):
         """Scoring closure with the per-(query, cluster) work hoisted out.
 
         Refinement loops and repeated ``score``/``optimize`` calls re-score
@@ -332,6 +380,8 @@ class CostEstimator:
         ``QueryStatic`` are identical throughout, so they come from the
         instance-level LRU (``_skeleton_for``) — at most ONE skeleton build
         per pair, and one fused stacked forward per scored batch.
+        ``deferred`` makes the closure dispatch and return a
+        ``DeferredResult`` instead of blocking on the device values.
         """
         metrics = tuple(metrics)
         if any(self.models[m][1].traditional_mp for m in metrics):
@@ -344,8 +394,10 @@ class CostEstimator:
                 graphs = pad_batch(
                     build_graph_batch(query, cluster, assignments), bucket_size(n)
                 )
-                scored = self.estimate(graphs, metrics)
-                return {m: v[:n] for m, v in scored.items()}
+                pending = self.estimate(graphs, metrics, deferred=True)
+                return _maybe_defer(
+                    lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
+                )
 
             return score_generic
 
@@ -362,14 +414,21 @@ class CostEstimator:
                 a_place = np.concatenate([a_place, np.repeat(a_place[-1:], pad, axis=0)])
             a_place = jnp.asarray(a_place)
             if stacked is not None:
-                scored = placed_predict_fused(stacked, skel, a_place, static)
-                return {m: v[:n] for m, v in scored.items()}
-            return {
+                pending = placed_predict_fused(
+                    stacked, skel, a_place, static, deferred=True
+                )
+                return _maybe_defer(
+                    lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
+                )
+            # heterogeneous (non-fusable) configs: per-metric loop, computed
+            # eagerly — the rare path keeps no deferral, only the wrapper type
+            out = {
                 m: placed_predict(
                     self.models[m][0], skel, a_place, static, self.models[m][1]
                 )[:n]
                 for m in metrics
             }
+            return _maybe_defer(lambda: out, deferred)
 
         return score
 
@@ -379,6 +438,7 @@ class CostEstimator:
         cluster,
         assignments: np.ndarray,
         metrics: Optional[Sequence[str]] = None,
+        deferred: bool = False,
     ) -> Dict[str, np.ndarray]:
         """Score an ``(N, n_ops)`` assignment matrix on every requested metric.
 
@@ -387,7 +447,7 @@ class CostEstimator:
         so results are independent of the bucket and of batchmates.
         """
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
-        return self.scorer(query, cluster, metrics)(
+        return self.scorer(query, cluster, metrics, deferred=deferred)(
             np.asarray(assignments, dtype=np.int64)
         )
 
@@ -412,6 +472,7 @@ class CostEstimator:
         sizes: Sequence[int],
         metrics: Tuple[str, ...],
         max_rows: Optional[int],
+        deferred: bool = False,
     ) -> List[Dict[str, np.ndarray]]:
         """One stacked forward per ``max_rows`` chunk of a merged host batch.
 
@@ -420,11 +481,13 @@ class CostEstimator:
         contains (cached by signature hash — a recurring request mix reuses
         its plan AND its jit trace), so stage-3 work tracks real rows rather
         than the widest member.  Answers are split back per source batch.
+        Every chunk is dispatched before any is blocked on; ``deferred``
+        additionally defers the blocking itself to ``result()``.
         """
         stacked = self._stacked_for(metrics)
         total = int(merged.op_x.shape[0])
         step = max_rows if max_rows else total
-        parts: List[Dict[str, np.ndarray]] = []
+        launched: List[Tuple[jax.Array, int]] = []
         fields = [np.asarray(x) for x in merged]
         for s in range(0, total, step):
             chunk = JointGraph(*[x[s : s + step] for x in fields])
@@ -434,20 +497,29 @@ class CostEstimator:
             fwd = _jitted_forward_stacked(
                 stacked.cfgs[0].gnn, False, banding, active_lowering()
             )
-            raw = np.asarray(fwd(stacked.params, jax.tree_util.tree_map(jnp.asarray, chunk)))
-            parts.append({m: v[:n] for m, v in _split_votes(raw, stacked).items()})
-        merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
-        out, off = [], 0
-        for size in sizes:
-            out.append({m: merged_out[m][off : off + size] for m in metrics})
-            off += size
-        return out
+            raw = fwd(stacked.params, jax.tree_util.tree_map(jnp.asarray, chunk))
+            launched.append((raw, n))
+
+        def finalize() -> List[Dict[str, np.ndarray]]:
+            parts = [
+                {m: v[:n] for m, v in _split_votes(np.asarray(raw), stacked).items()}
+                for raw, n in launched
+            ]
+            merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+            out, off = [], 0
+            for size in sizes:
+                out.append({m: merged_out[m][off : off + size] for m in metrics})
+                off += size
+            return out
+
+        return _maybe_defer(finalize, deferred)
 
     def estimate_many(
         self,
         batches: Sequence,
         metrics: Optional[Sequence[str]] = None,
         max_rows: Optional[int] = None,
+        deferred: bool = False,
     ) -> List[Dict[str, np.ndarray]]:
         """``estimate`` for N independent batches through ONE fused forward.
 
@@ -457,12 +529,12 @@ class CostEstimator:
         along the batch axis (``graph.merge_graph_batches``) and one
         kernel-routed stacked forward per ``max_rows`` chunk answers
         everything.  Returns one metric -> predictions dict per input batch,
-        order-aligned.
+        order-aligned (``deferred``: a ``DeferredResult`` resolving to it).
         """
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
         batches = list(batches)
         if not batches:
-            return []
+            return _maybe_defer(lambda: [], deferred)
         host = []
         for b in batches:
             g = jax.tree_util.tree_map(np.asarray, self._as_graphs(b))
@@ -473,25 +545,41 @@ class CostEstimator:
             raise ValueError("no graphs to estimate")
         if not self.supports_cross_query(metrics):
             # heterogeneous / ablation configs: per-batch fallback, chunked
-            # and bucket-padded exactly like the merged path
-            out: List[Optional[Dict[str, np.ndarray]]] = []
+            # and bucket-padded exactly like the merged path; every chunk is
+            # dispatched before any is blocked on
+            pendings: List[Optional[List[Tuple]]] = []
             for g in host:
                 total = int(g.op_x.shape[0])
                 if total == 0:  # empty member: filled in below, like the
-                    out.append(None)  # merged path's zero-width slice
+                    pendings.append(None)  # merged path's zero-width slice
                     continue
                 step = max_rows if max_rows else total
                 parts = []
                 for s in range(0, total, step):
                     chunk = jax.tree_util.tree_map(lambda x: x[s : s + step], g)
                     n = int(chunk.op_x.shape[0])
-                    scored = self.estimate(pad_batch(chunk, bucket_size(n)), metrics)
-                    parts.append({m: v[:n] for m, v in scored.items()})
-                out.append({m: np.concatenate([p[m] for p in parts]) for m in metrics})
-            template = next(o for o in out if o is not None)
-            return [o if o is not None else {m: template[m][:0] for m in metrics} for o in out]
+                    parts.append(
+                        (self.estimate(pad_batch(chunk, bucket_size(n)), metrics, deferred=True), n)
+                    )
+                pendings.append(parts)
+
+            def finalize_fallback() -> List[Dict[str, np.ndarray]]:
+                out: List[Optional[Dict[str, np.ndarray]]] = []
+                for parts in pendings:
+                    if parts is None:
+                        out.append(None)
+                        continue
+                    done = [{m: v[:n] for m, v in p.result().items()} for p, n in parts]
+                    out.append({m: np.concatenate([d[m] for d in done]) for m in metrics})
+                template = next(o for o in out if o is not None)
+                return [
+                    o if o is not None else {m: template[m][:0] for m in metrics}
+                    for o in out
+                ]
+
+            return _maybe_defer(finalize_fallback, deferred)
         merged, sizes = merge_graph_batches(host)
-        return self._merged_forward(merged, sizes, metrics, max_rows)
+        return self._merged_forward(merged, sizes, metrics, max_rows, deferred=deferred)
 
     def score_many(
         self,
@@ -499,6 +587,7 @@ class CostEstimator:
         metrics: Optional[Sequence[str]] = None,
         max_rows: Optional[int] = None,
         keys: Optional[Sequence[Tuple]] = None,
+        deferred: bool = False,
     ) -> List[Dict[str, np.ndarray]]:
         """``score`` for N distinct (query, cluster, assignments) requests
         through ONE fused forward.
@@ -522,9 +611,10 @@ class CostEstimator:
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
         requests = list(requests)
         if not requests:
-            return []
+            return _maybe_defer(lambda: [], deferred)
         if not self.supports_cross_query(metrics):
-            return [self.score(q, c, a, metrics) for q, c, a in requests]
+            per_req = [self.score(q, c, a, metrics, deferred=True) for q, c, a in requests]
+            return _maybe_defer(lambda: [p.result() for p in per_req], deferred)
         stacked = self._stacked_for(metrics)
         if keys is None:
             keys = [skeleton_cache_key(q, c) for q, c, _ in requests]
@@ -554,7 +644,7 @@ class CostEstimator:
                 )
             merged, _ = merge_graph_batches(pieces)
             sizes = [sum(len(mats[i]) for i in idxs) for idxs in groups.values()]
-            per_group = self._merged_forward(merged, sizes, metrics, max_rows)
+            pending = self._merged_forward(merged, sizes, metrics, max_rows, deferred=True)
         else:
             index_of, skels_dev, banding, max_parents = self._merged_group_for(
                 requests, groups
@@ -567,19 +657,24 @@ class CostEstimator:
                 ids.append(np.full(len(block), index_of[key], dtype=np.int32))
             skel_id = np.concatenate(ids) if len(ids) > 1 else ids[0]
             a_place = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
-            per_group = self._merged_placements_forward(
+            pending = self._merged_placements_forward(
                 skels_dev, banding, max_parents, skel_id, a_place,
-                [len(b) for b in blocks], stacked, metrics, max_rows,
+                [len(b) for b in blocks], stacked, metrics, max_rows, deferred=True,
             )
-        # split each structure's block back onto its requests, in order
-        out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(requests)
-        for g_out, idxs in zip(per_group, groups.values()):
-            off = 0
-            for i in idxs:
-                n = len(mats[i])
-                out[i] = {m: g_out[m][off : off + n] for m in metrics}
-                off += n
-        return out
+
+        def finalize() -> List[Dict[str, np.ndarray]]:
+            # split each structure's block back onto its requests, in order
+            per_group = pending.result()
+            out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(requests)
+            for g_out, idxs in zip(per_group, groups.values()):
+                off = 0
+                for i in idxs:
+                    n = len(mats[i])
+                    out[i] = {m: g_out[m][off : off + n] for m in metrics}
+                    off += n
+            return out
+
+        return _maybe_defer(finalize, deferred)
 
     def _merged_group_for(self, requests, groups) -> Tuple:
         """(key -> skeleton index, device skeleton stack, banding,
@@ -618,6 +713,7 @@ class CostEstimator:
         stacked: StackedEnsembles,
         metrics: Tuple[str, ...],
         max_rows: Optional[int],
+        deferred: bool = False,
     ) -> List[Dict[str, np.ndarray]]:
         """Chunked ``apply_gnn_merged`` over a structure-major placement batch.
 
@@ -631,7 +727,7 @@ class CostEstimator:
         )
         total = int(a_place.shape[0])
         step = max_rows if max_rows else total
-        parts: List[Dict[str, np.ndarray]] = []
+        launched: List[Tuple[jax.Array, int]] = []
         for s in range(0, total, step):
             ids, ap = skel_id[s : s + step], a_place[s : s + step]
             n = len(ids)
@@ -639,14 +735,22 @@ class CostEstimator:
             if pad:
                 ids = np.concatenate([ids, np.repeat(ids[-1:], pad)])
                 ap = np.concatenate([ap, np.repeat(ap[-1:], pad, axis=0)])
-            raw = np.asarray(fwd(stacked.params, skels_dev, jnp.asarray(ids), jnp.asarray(ap)))
-            parts.append({m: v[:n] for m, v in _split_votes(raw, stacked).items()})
-        merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
-        out, off = [], 0
-        for size in sizes:
-            out.append({m: merged_out[m][off : off + size] for m in metrics})
-            off += size
-        return out
+            raw = fwd(stacked.params, skels_dev, jnp.asarray(ids), jnp.asarray(ap))
+            launched.append((raw, n))
+
+        def finalize() -> List[Dict[str, np.ndarray]]:
+            parts = [
+                {m: v[:n] for m, v in _split_votes(np.asarray(raw), stacked).items()}
+                for raw, n in launched
+            ]
+            merged_out = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
+            out, off = [], 0
+            for size in sizes:
+                out.append({m: merged_out[m][off : off + size] for m in metrics})
+                off += size
+            return out
+
+        return _maybe_defer(finalize, deferred)
 
     def optimize(self, query, cluster, target_metric: str = "latency_p", **kwargs):
         """Cost-based placement search (paper SV): sample -> score -> argopt.

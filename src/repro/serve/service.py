@@ -30,36 +30,84 @@ Throughput economics: each forward pays a fixed dispatch cost that dominates
 these small graphs, so B coalesced requests cost ~1 dispatch instead of B —
 and a heterogeneous stream of S structures costs ~1 dispatch instead of S.
 ``benchmarks/serve_bench.py`` gates both wins in CI.
+
+Latency engineering (docs/load_harness.md measures all three):
+
+* **double-buffered drains** (``double_buffer``, default on for accelerator
+  backends): every drain
+  is split into a *launch* half (host-side grouping + featurization + device
+  dispatch, via the estimator's ``deferred=True`` calls) and a *finalize*
+  half (block on device values, vote, resolve futures).  The worker launches
+  drain N+1 before finalizing drain N, so host featurization overlaps device
+  compute and the steady-state drain cycle tracks ``max(host, device)``
+  instead of their sum;
+* **bounded-queue admission control** (``max_queue_depth``): past the bound,
+  ``submit_*`` raises ``ServiceOverloadError`` (``overflow="reject"``) or
+  blocks the producer (``overflow="block"``) instead of queueing unbounded
+  work — under sustained overload, latency is shed at the door rather than
+  grown in the queue;
+* **warmed compile caches** (``warmup=[(query, cluster), ...]``): ``start()``
+  pre-runs every bucket-padded forward shape the structure set can hit, so
+  first-request jit compilation never lands in a caller's latency.  Merged
+  cross-query traces are keyed on the drain's *structure mix*, an unbounded
+  space under open-loop arrivals — so the service only merges mixes that are
+  warmed or within ``max_merged_mixes`` first-seen runtime admissions, and
+  routes every other drain down the (warm) per-structure path.
 """
 
 from __future__ import annotations
 
 import threading
-from collections import deque
+import time
+from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.bucketing import bucket_size
 from repro.core.graph import JointGraph, skeleton_cache_key
 from repro.serve.estimator import CostEstimator
 
 
+class ServiceOverloadError(RuntimeError):
+    """A submit hit the bounded queue (``max_queue_depth``) with
+    ``overflow="reject"``: the request was *not* enqueued.  Callers shed load
+    (drop, retry with backoff, or degrade) instead of growing tail latency."""
+
+
 @dataclass
 class ServiceStats:
-    """Worker-side counters (mutated under the service lock)."""
+    """Worker-side counters (mutated under the service lock).
+
+    ``n_drained`` is the sum of all drain sizes, so ``n_drained ==
+    n_requests`` exactly when every submitted request has been popped by the
+    worker (the service-parity property tests pin this).  ``queue_wait_s`` /
+    ``max_queue_wait_s`` measure time between submit and drain pop —
+    time-in-queue, the component of request latency that backpressure and
+    double-buffering exist to bound.
+    """
 
     n_requests: int = 0
     n_batches: int = 0  # worker wake-ups that executed work
     n_forwards: int = 0  # estimator calls issued (one per group chunk)
     n_coalesced: int = 0  # requests that shared a forward with another
     n_cross_query: int = 0  # score requests answered via a merged cross-query batch
+    n_drained: int = 0  # requests popped into drains (== sum of drain sizes)
+    n_rejected: int = 0  # submits refused by admission control (never enqueued)
+    max_queue_depth: int = 0  # peak queued requests observed at submit
+    max_drain: int = 0  # largest single drain
+    queue_wait_s: float = 0.0  # total submit -> drain-pop time across requests
+    max_queue_wait_s: float = 0.0  # worst single request's time in queue
 
     def reset(self) -> None:
         self.n_requests = self.n_batches = 0
         self.n_forwards = self.n_coalesced = self.n_cross_query = 0
+        self.n_drained = self.n_rejected = 0
+        self.max_queue_depth = self.max_drain = 0
+        self.queue_wait_s = self.max_queue_wait_s = 0.0
 
 
 class _Request(NamedTuple):
@@ -67,6 +115,18 @@ class _Request(NamedTuple):
     key: Tuple  # coalescing key: equal keys share one forward
     payload: Tuple
     future: Future
+    t_submit: float  # monotonic enqueue time (time-in-queue tracking)
+
+
+class _LaunchedGroup(NamedTuple):
+    """One coalescing group whose device work is dispatched but not resolved.
+
+    ``finalize`` blocks on the device values and returns ``(answers,
+    n_forwards, n_cross)`` — the per-request answers (values or exceptions)
+    plus the work counters recorded at launch."""
+
+    reqs: List[_Request]
+    finalize: Callable[[], Tuple[List[object], int, int]]
 
 
 class PlacementService:
@@ -81,10 +141,27 @@ class PlacementService:
     dispatch-bound: a drain averaging more than ``cross_query_row_limit``
     candidate rows per structure has enough work per structure to amortize
     its own specialized forward and takes the per-structure path instead
-    (None: always merge).  ``auto_start`` False leaves the worker stopped so
-    tests (and one-shot batch jobs) can enqueue everything first and then
-    ``start()`` for one deterministic drain.  Use as a context manager or
-    call ``close()`` to stop the worker.
+    (None: always merge).  Merged traces are additionally keyed on the
+    drain's structure *mix*, so the service merges only mixes registered by
+    ``warm()`` plus at most ``max_merged_mixes`` first-seen runtime mixes
+    (None: unbounded) — everything else takes the per-structure path, keeping
+    the compile cache bounded under open-loop arrivals.
+
+    ``max_queue_depth`` bounds the submit queue: past it, ``submit_*``
+    raises ``ServiceOverloadError`` (``overflow="reject"``, the default) or
+    blocks the producer until the worker drains (``overflow="block"``).
+    ``double_buffer`` overlaps drain N+1's host featurization with drain N's
+    device compute; the default (``None``) enables it only on accelerator
+    backends — on CPU host and "device" share cores, so the launch/finalize
+    split buys no overlap and only fragments bursts into smaller drains.  ``warmup`` is an optional sequence of
+    ``(query, cluster)`` structures pre-compiled by ``start()`` (see
+    ``warm()``), so p99 never pays first-request jit compilation.
+
+    ``auto_start`` False leaves the worker stopped so tests (and one-shot
+    batch jobs) can enqueue everything first and then ``start()`` for one
+    deterministic drain.  Use as a context manager or call ``close()`` to
+    stop the worker; close drains (or fails — never silently drops) every
+    accepted request.
     """
 
     def __init__(
@@ -94,12 +171,36 @@ class PlacementService:
         auto_start: bool = True,
         cross_query: bool = True,
         cross_query_row_limit: Optional[int] = 16,
+        max_queue_depth: Optional[int] = None,
+        overflow: str = "reject",
+        double_buffer: Optional[bool] = None,
+        warmup: Optional[Sequence[Tuple]] = None,
+        warmup_cands: int = 8,
+        max_merged_mixes: Optional[int] = 32,
     ):
+        if overflow not in ("reject", "block"):
+            raise ValueError(f"overflow must be 'reject' or 'block', got {overflow!r}")
         self.estimator = estimator
         self.max_batch = int(max_batch)
         self.cross_query = bool(cross_query)
         self.cross_query_row_limit = cross_query_row_limit
+        self.max_queue_depth = max_queue_depth
+        self.overflow = overflow
+        if double_buffer is None:
+            # launch-ahead only pays where device compute runs beside the
+            # host; on CPU they share cores, so the split just fragments
+            # drains (an extra dispatch per burst, measured in serve_bench)
+            double_buffer = jax.default_backend() != "cpu"
+        self.double_buffer = bool(double_buffer)
+        self.warmup_cands = int(warmup_cands)
+        self.max_merged_mixes = max_merged_mixes
         self.stats = ServiceStats()
+        self._warmup = list(warmup) if warmup else []
+        self._warmed = False
+        # structure mixes allowed on the merged path: warmed mixes plus up to
+        # max_merged_mixes first-seen runtime mixes (insertion-ordered set)
+        self._known_mixes: "OrderedDict[frozenset, bool]" = OrderedDict()
+        self._n_runtime_mixes = 0
         self._queue: "deque[_Request]" = deque()
         self._cond = threading.Condition()
         self._stopped = False
@@ -113,6 +214,14 @@ class PlacementService:
         with self._cond:
             if self._stopped:  # not assert: a submit after close() must fail
                 raise RuntimeError("PlacementService is closed")
+            starting = self._thread is None
+        if starting and self._warmup and not self._warmed:
+            # outside the lock: warmup compiles for seconds, submits must not
+            # block on it (they queue; the worker starts only after warm)
+            self.warm(self._warmup, max_cands=self.warmup_cands)
+        with self._cond:
+            if self._stopped:
+                raise RuntimeError("PlacementService is closed")
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._run, name="placement-service", daemon=True
@@ -123,8 +232,10 @@ class PlacementService:
     def close(self) -> None:
         """Stop the worker after draining everything already queued.
 
-        Closing a service that was never started fails any queued futures
-        instead of leaving their waiters hanging forever."""
+        Every accepted request resolves: queued futures on a never-started
+        service fail with ``RuntimeError`` instead of leaving their waiters
+        hanging, and if the worker thread died, requests it left behind are
+        failed here rather than silently dropped."""
         with self._cond:
             self._stopped = True
             orphans = list(self._queue) if self._thread is None else []
@@ -136,6 +247,16 @@ class PlacementService:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+            # a healthy worker exits only once the queue is empty; anything
+            # left means it died mid-run — fail, never strand, the waiters
+            with self._cond:
+                leftovers = list(self._queue)
+                self._queue.clear()
+            for r in leftovers:
+                if not r.future.done():
+                    r.future.set_exception(
+                        RuntimeError("PlacementService worker died before serving this request")
+                    )
 
     def __enter__(self) -> "PlacementService":
         return self.start()
@@ -143,15 +264,108 @@ class PlacementService:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # -- warmup -------------------------------------------------------------------
+
+    def warm(
+        self,
+        structures: Sequence[Tuple],
+        max_cands: Optional[int] = None,
+        metrics: Optional[Sequence[str]] = None,
+    ) -> int:
+        """Pre-compile the bounded set of serving traces for ``structures``.
+
+        For each ``(query, cluster)`` pair, runs the placement-specialized
+        scorer at every power-of-two candidate bucket up to
+        ``bucket_size(max_cands)`` — the full set of jit shapes the
+        per-structure drain path can hit.  When cross-query merging applies,
+        additionally registers the full structure mix in the merged-mix set
+        and runs the merged drain at every row bucket up to
+        ``bucket_size(len(structures) * max_cands)`` (capped by
+        ``max_batch``).  Dummy all-zero assignments are used — compilation is
+        keyed on shapes and structure, never on values.  Returns the number
+        of warm forwards issued; the count is bounded by ``O(len(structures)
+        * log(max_cands))``, never by traffic.
+        """
+        structures = list(structures)
+        metrics = tuple(metrics) if metrics is not None else tuple(self.estimator.models)
+        max_cands = self.warmup_cands if max_cands is None else int(max_cands)
+        n_forwards = 0
+        for q, c in structures:
+            a1 = np.zeros((1, q.n_ops()), dtype=np.int64)
+            b = 1
+            while True:
+                self.estimator.score(q, c, np.repeat(a1, b, axis=0), metrics)
+                n_forwards += 1
+                if b >= min(bucket_size(max_cands), self.max_batch):
+                    break
+                b *= 2
+        if (
+            self.cross_query
+            and len(structures) > 1
+            and self.estimator.supports_cross_query(metrics)
+        ):
+            mix = frozenset(skeleton_cache_key(q, c) for q, c in structures)
+            with self._cond:
+                self._known_mixes[mix] = True
+            n_structures = len(structures)
+            top = min(bucket_size(n_structures * max_cands), self.max_batch)
+            b = bucket_size(n_structures)
+            while True:
+                # exactly b total rows distributed over every structure, so
+                # the merged chunk pads to exactly this power-of-two bucket
+                base, extra = divmod(b, n_structures)
+                items = [
+                    (q, c, np.zeros((base + (1 if j < extra else 0), q.n_ops()), dtype=np.int64))
+                    for j, (q, c) in enumerate(structures)
+                ]
+                self.estimator.score_many(items, metrics, max_rows=self.max_batch)
+                n_forwards += 1
+                if b >= top:
+                    break
+                b *= 2
+        self._warmed = True
+        return n_forwards
+
+    def _admit_mix(self, mix: frozenset) -> bool:
+        """Whether this drain's structure mix may use the merged path.
+
+        Warmed mixes always pass; unseen runtime mixes are admitted
+        first-come up to ``max_merged_mixes`` (each admission buys a new jit
+        trace per row bucket, so the bound is what keeps the compile cache —
+        and p99 — finite under arbitrary arrival interleavings)."""
+        if self.max_merged_mixes is None:
+            return True
+        with self._cond:
+            if mix in self._known_mixes:
+                return True
+            if self._n_runtime_mixes >= self.max_merged_mixes:
+                return False
+            self._n_runtime_mixes += 1
+            self._known_mixes[mix] = True
+            return True
+
     # -- submission ---------------------------------------------------------------
 
     def _submit(self, req: _Request) -> Future:
         with self._cond:
             if self._stopped:  # not assert: under -O the future would hang forever
                 raise RuntimeError("PlacementService is closed")
+            if self.max_queue_depth is not None and len(self._queue) >= self.max_queue_depth:
+                if self.overflow == "reject":
+                    self.stats.n_rejected += 1
+                    raise ServiceOverloadError(
+                        f"queue depth {len(self._queue)} at max_queue_depth="
+                        f"{self.max_queue_depth}; request rejected"
+                    )
+                while len(self._queue) >= self.max_queue_depth and not self._stopped:
+                    self._cond.wait()
+                if self._stopped:
+                    raise RuntimeError("PlacementService is closed")
             self._queue.append(req)
             self.stats.n_requests += 1
-            self._cond.notify()
+            if len(self._queue) > self.stats.max_queue_depth:
+                self.stats.max_queue_depth = len(self._queue)
+            self._cond.notify_all()
         return req.future
 
     def _resolve_metrics(self, metrics: Optional[Sequence[str]]) -> Tuple[str, ...]:
@@ -164,7 +378,10 @@ class PlacementService:
         assignments: np.ndarray,
         metrics: Optional[Sequence[str]] = None,
     ) -> Future:
-        """Async ``CostEstimator.score``; resolves to metric -> (N,) scores."""
+        """Async ``CostEstimator.score``; resolves to metric -> (N,) scores.
+
+        Raises ``ServiceOverloadError`` (or blocks, per ``overflow``) when
+        the bounded queue is full."""
         metrics = self._resolve_metrics(metrics)
         a = np.asarray(assignments, dtype=np.int64)
         skel_key = skeleton_cache_key(query, cluster)
@@ -172,20 +389,28 @@ class PlacementService:
         # merge at drain time; the structure key rides along for sub-routing
         key = ("score", metrics) if self.cross_query else ("score", skel_key, metrics)
         return self._submit(
-            _Request("score", key, (query, cluster, a, metrics, skel_key), Future())
+            _Request(
+                "score", key, (query, cluster, a, metrics, skel_key), Future(),
+                time.monotonic(),
+            )
         )
 
     def submit_estimate(
         self, graphs: JointGraph, metrics: Optional[Sequence[str]] = None
     ) -> Future:
-        """Async ``CostEstimator.estimate`` over a batched ``JointGraph``."""
+        """Async ``CostEstimator.estimate`` over a batched ``JointGraph``.
+
+        Raises ``ServiceOverloadError`` (or blocks, per ``overflow``) when
+        the bounded queue is full."""
         metrics = self._resolve_metrics(metrics)
         if not isinstance(graphs, JointGraph):
             graphs = self.estimator._as_graphs(graphs)
         if graphs.op_x.ndim == 2:  # single graph: promote to a batch of one
             graphs = jax.tree_util.tree_map(lambda x: np.asarray(x)[None], graphs)
         key = ("estimate", metrics)
-        return self._submit(_Request("estimate", key, (graphs, metrics), Future()))
+        return self._submit(
+            _Request("estimate", key, (graphs, metrics), Future(), time.monotonic())
+        )
 
     def score(self, query, cluster, assignments, metrics=None) -> Dict[str, np.ndarray]:
         """Synchronous convenience: submit one score request and wait."""
@@ -198,48 +423,110 @@ class PlacementService:
     # -- worker -------------------------------------------------------------------
 
     def _run(self) -> None:
-        while True:
+        # The drain pipeline.  Each iteration pops everything queued, LAUNCHES
+        # it (host grouping + featurization + async device dispatch), then
+        # finalizes the PREVIOUS drain (block on device values, resolve
+        # futures).  While drain N's device work runs, drain N+1's host work
+        # proceeds — and when the queue is empty, the pending drain finalizes
+        # immediately (the wait guard skips sleeping while work is in flight),
+        # so idle-period latency never waits for a successor drain.
+        pending: List[_LaunchedGroup] = []
+        batch: List[_Request] = []
+        launched: List[_LaunchedGroup] = []
+        try:
+            while True:
+                with self._cond:
+                    while not self._queue and not self._stopped and not pending:
+                        self._cond.wait()
+                    batch = list(self._queue)
+                    self._queue.clear()
+                    stopped = self._stopped
+                    if batch:
+                        now = time.monotonic()
+                        self.stats.n_batches += 1
+                        self.stats.n_drained += len(batch)
+                        if len(batch) > self.stats.max_drain:
+                            self.stats.max_drain = len(batch)
+                        for r in batch:
+                            wait = now - r.t_submit
+                            self.stats.queue_wait_s += wait
+                            if wait > self.stats.max_queue_wait_s:
+                                self.stats.max_queue_wait_s = wait
+                        self._cond.notify_all()  # blocked submitters: depth dropped
+                launched = []
+                if batch:
+                    groups: Dict[Tuple, List[_Request]] = {}  # dicts keep insertion order
+                    for req in batch:
+                        groups.setdefault(req.key, []).append(req)
+                    for reqs in groups.values():
+                        launched.append(self._launch_group(reqs))
+                for lg in pending:
+                    self._finalize_group(lg)
+                if self.double_buffer:
+                    pending = launched
+                else:
+                    for lg in launched:
+                        self._finalize_group(lg)
+                    pending = []
+                batch, launched = [], []
+                if stopped and not pending:
+                    with self._cond:
+                        if not self._queue:  # stopped and drained
+                            return
+        except BaseException as e:  # pragma: no cover - worker skeleton bug
+            # group-level failures are delivered per future and never reach
+            # here; this is the backstop for a bug in the loop itself: fail
+            # everything this worker owes so no accepted request is dropped
+            for lg in list(pending) + list(launched):
+                for r in lg.reqs:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(e)
             with self._cond:
-                while not self._queue and not self._stopped:
-                    self._cond.wait()
-                if not self._queue:  # stopped and drained
-                    return
-                batch = list(self._queue)
+                leftovers = list(self._queue)
                 self._queue.clear()
-                self.stats.n_batches += 1
-            groups: Dict[Tuple, List[_Request]] = {}  # dicts preserve insertion order
-            for req in batch:
-                groups.setdefault(req.key, []).append(req)
-            for reqs in groups.values():
-                try:
-                    self._execute_group(reqs)
-                except BaseException as e:  # deliver, don't kill the worker
-                    for r in reqs:
-                        if not r.future.done():
-                            r.future.set_exception(e)
+                self._cond.notify_all()
+            for r in leftovers:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            raise
 
-    def _execute_group(self, reqs: List[_Request]) -> None:
-        if reqs[0].kind == "score":
-            per_request, n_forwards, n_cross = self._execute_scores(reqs)
-        else:
-            per_request, n_forwards, n_cross = self._execute_estimates(reqs)
+    def _launch_group(self, reqs: List[_Request]) -> _LaunchedGroup:
+        """Host-side half of one group: featurize + dispatch, don't block."""
+        try:
+            if reqs[0].kind == "score":
+                finalize = self._launch_scores(reqs)
+            else:
+                finalize = self._launch_estimates(reqs)
+        except BaseException as e:  # launch failed: the whole group shares the error
+            finalize = (lambda err: lambda: ([err] * len(reqs), 0, 0))(e)
+        return _LaunchedGroup(reqs, finalize)
+
+    def _finalize_group(self, lg: _LaunchedGroup) -> None:
+        """Device-side half: block on results, record work, resolve futures."""
+        try:
+            answers, n_forwards, n_cross = lg.finalize()
+        except BaseException as e:  # deliver, don't kill the worker
+            answers, n_forwards, n_cross = [e] * len(lg.reqs), 0, 0
         # count the work before resolving futures, so a caller woken by
         # result() never observes counters lagging its own answer
         with self._cond:
             self.stats.n_forwards += n_forwards
             self.stats.n_cross_query += n_cross
-            if len(reqs) > 1:
-                self.stats.n_coalesced += len(reqs)
+            if len(lg.reqs) > 1:
+                self.stats.n_coalesced += len(lg.reqs)
         # a per-request answer may be an exception (bad request, failed
         # subgroup): metrics-tuple groups span unrelated callers, so one
         # request's failure must never fail its batchmates
-        for r, answer in zip(reqs, per_request):
+        for r, answer in zip(lg.reqs, answers):
             if isinstance(answer, BaseException):
                 r.future.set_exception(answer)
             else:
                 r.future.set_result(answer)
 
-    def _execute_scores(self, reqs: List[_Request]):
+    def _launch_scores(self, reqs: List[_Request]) -> Callable:
         metrics = reqs[0].payload[3]
         answers: List[object] = [None] * len(reqs)
         # bad requests fail individually, they never poison the drain
@@ -253,7 +540,6 @@ class PlacementService:
         rows_per_structure = (
             sum(len(reqs[i].payload[2]) for i in live) / len(distinct) if live else 0.0
         )
-        n_forwards = n_cross = 0
         if (
             self.cross_query
             and len(distinct) > 1
@@ -262,56 +548,79 @@ class PlacementService:
                 or rows_per_structure <= self.cross_query_row_limit
             )
             and self.estimator.supports_cross_query(metrics)
+            and self._admit_mix(frozenset(distinct))
         ):
             # the cross-query hot path: merge every structure's placement
             # batch and answer the whole drain with one signature-banded
             # merged forward per max_batch rows
             items = [(reqs[i].payload[0], reqs[i].payload[1], reqs[i].payload[2]) for i in live]
-            merged = self.estimator.score_many(
+            pending = self.estimator.score_many(
                 items,
                 metrics,
                 max_rows=self.max_batch,
                 keys=[reqs[i].payload[4] for i in live],  # computed once at submit
+                deferred=True,
             )
-            for i, ans in zip(live, merged):
-                answers[i] = ans
             total = sum(len(a) for _, _, a in items)
             n_forwards = -(-total // self.max_batch)
             n_cross = len(live)
-        else:
-            # one structure (or merging unsupported / compute-bound): the
-            # placement-specialized per-structure path, candidate matrices
-            # concatenated per skeleton; a failing subgroup fails only its
-            # own requests
-            subgroups: Dict[Tuple, List[int]] = {}
-            for i in live:
-                subgroups.setdefault(reqs[i].payload[4], []).append(i)
-            for idxs in subgroups.values():
-                query, cluster, _, _, _ = reqs[idxs[0]].payload
-                mats = [reqs[i].payload[2] for i in idxs]
-                sizes = [len(m) for m in mats]
-                merged_mat = np.concatenate(mats, axis=0)
-                try:
-                    parts = []
-                    for s in range(0, len(merged_mat), self.max_batch):
-                        parts.append(
-                            self.estimator.score(
-                                query, cluster, merged_mat[s : s + self.max_batch], metrics
-                            )
+
+            def finalize():
+                for i, ans in zip(live, pending.result()):
+                    answers[i] = ans
+                return answers, n_forwards, n_cross
+
+            return finalize
+
+        # one structure (or merging unsupported / compute-bound / mix not
+        # admitted): the placement-specialized per-structure path, candidate
+        # matrices concatenated per skeleton; a failing subgroup fails only
+        # its own requests
+        subgroups: Dict[Tuple, List[int]] = {}
+        for i in live:
+            subgroups.setdefault(reqs[i].payload[4], []).append(i)
+        n_forwards = 0
+        launched_subs: List[Tuple[List[int], List[int], Optional[List], Optional[BaseException]]] = []
+        for idxs in subgroups.values():
+            query, cluster, _, _, _ = reqs[idxs[0]].payload
+            mats = [reqs[i].payload[2] for i in idxs]
+            sizes = [len(m) for m in mats]
+            merged_mat = np.concatenate(mats, axis=0)
+            try:
+                parts = []
+                for s in range(0, len(merged_mat), self.max_batch):
+                    parts.append(
+                        self.estimator.score(
+                            query, cluster, merged_mat[s : s + self.max_batch],
+                            metrics, deferred=True,
                         )
-                        n_forwards += 1
-                    joined = {m: np.concatenate([p[m] for p in parts]) for m in metrics}
-                except BaseException as e:
+                    )
+                    n_forwards += 1
+                launched_subs.append((idxs, sizes, parts, None))
+            except BaseException as e:
+                launched_subs.append((idxs, sizes, None, e))
+
+        def finalize():
+            for idxs, sizes, parts, err in launched_subs:
+                if err is None:
+                    try:
+                        done = [p.result() for p in parts]
+                        joined = {m: np.concatenate([d[m] for d in done]) for m in metrics}
+                    except BaseException as e:
+                        err = e
+                if err is not None:
                     for i in idxs:
-                        answers[i] = e
+                        answers[i] = err
                     continue
                 off = 0
                 for i, size in zip(idxs, sizes):
                     answers[i] = {m: joined[m][off : off + size] for m in metrics}
                     off += size
-        return answers, n_forwards, n_cross
+            return answers, n_forwards, 0
 
-    def _execute_estimates(self, reqs: List[_Request]):
+        return finalize
+
+    def _launch_estimates(self, reqs: List[_Request]) -> Callable:
         metrics = reqs[0].payload[1]
         graphs = [r.payload[0] for r in reqs]
         sizes = [int(np.asarray(g.op_x).shape[0]) for g in graphs]
@@ -323,9 +632,11 @@ class PlacementService:
         # which would otherwise each pay a fresh jit trace.  Unmergeable
         # metrics (heterogeneous / ablation configs) chunk per batch instead,
         # so count what was actually issued
-        answers = self.estimator.estimate_many(graphs, metrics, max_rows=self.max_batch)
+        pending = self.estimator.estimate_many(
+            graphs, metrics, max_rows=self.max_batch, deferred=True
+        )
         if self.estimator.supports_cross_query(metrics):
             n_forwards = -(-total // self.max_batch)
         else:
             n_forwards = sum(-(-n // self.max_batch) for n in sizes if n)
-        return answers, n_forwards, 0
+        return lambda: (pending.result(), n_forwards, 0)

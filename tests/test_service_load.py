@@ -1,0 +1,377 @@
+"""Service correctness battery for the load-hardened ``PlacementService``:
+property-based parity under arbitrary request interleavings, multi-threaded
+stress with injected mid-drain failures, worker-death delivery guarantees,
+backpressure + straggler fault wiring, and a deterministic load-harness smoke
+run (``slow`` marker)."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.core import CostModelConfig, GNNConfig, init_cost_model
+from repro.core.graph import batch_graphs, build_graph
+from repro.dsps import WorkloadGenerator
+from repro.launch.faults import ClusterMonitor, FaultPolicy
+from repro.placement import sample_assignment_matrix
+from repro.serve import (
+    CostEstimator,
+    PlacementService,
+    ServiceOverloadError,
+    bursty_arrivals,
+    poisson_arrivals,
+    run_open_loop,
+    score_request_stream,
+)
+
+METRICS = ("latency_p", "success", "backpressure")
+#: per-request metric selections the interleaving draws from; None = all
+METRIC_MIXES = (None, ("latency_p",), ("latency_p", "success"))
+
+
+def _models(hidden=16, n_ensemble=2):
+    models = {}
+    for i, m in enumerate(METRICS):
+        cfg = CostModelConfig(metric=m, n_ensemble=n_ensemble, gnn=GNNConfig(hidden=hidden))
+        models[m] = (init_cost_model(jax.random.PRNGKey(i), cfg), cfg)
+    return models
+
+
+# one estimator for the whole module: the jit caches are shared, so every
+# test after the first runs on warm traces and the battery stays fast
+_EST = CostEstimator(_models())
+
+
+def _structures(n=4, seed=71):
+    gen = WorkloadGenerator(seed=seed)
+    kinds = ("linear", "two_way", "three_way")
+    return [
+        (gen.query(kind=kinds[i % len(kinds)], name=f"batt{i}"), gen.cluster(3 + i % 4))
+        for i in range(n)
+    ]
+
+
+_STRUCTURES = _structures()
+
+
+def _graph_batch(n, seed):
+    gen = WorkloadGenerator(seed=seed)
+    traces = gen.corpus(n)
+    return batch_graphs([build_graph(t.query, t.cluster, t.placement) for t in traces])
+
+
+_GRAPHS = (_graph_batch(3, 73), _graph_batch(5, 79))
+
+
+# -- satellite 1: property-based service parity -----------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_score=st.integers(0, 6),
+    n_est=st.integers(0, 3),
+    cross_query=st.booleans(),
+    double_buffer=st.booleans(),
+    shuffle_seed=st.integers(0, 10_000),
+    cands=st.integers(1, 5),
+)
+def test_any_interleaving_matches_serial_estimator(
+    n_score, n_est, cross_query, double_buffer, shuffle_seed, cands
+):
+    """PROPERTY: any interleaving of submit_score / submit_estimate across
+    mixed metric tuples and query structures resolves to the serial
+    ``CostEstimator`` answer — bit-identical on the per-structure path
+    (cross_query=False), float-identical on the merged paths — and the drain
+    accounting stays consistent (n_drained == n_requests, no lost futures)."""
+    rng = np.random.default_rng(shuffle_seed)
+    jobs = []  # ("score", q, c, a, metrics) | ("estimate", g, metrics)
+    for i in range(n_score):
+        q, c = _STRUCTURES[int(rng.integers(len(_STRUCTURES)))]
+        a = sample_assignment_matrix(q, c, cands, rng)
+        jobs.append(("score", q, c, a, METRIC_MIXES[int(rng.integers(len(METRIC_MIXES)))]))
+    for i in range(n_est):
+        g = _GRAPHS[int(rng.integers(len(_GRAPHS)))]
+        jobs.append(("estimate", g, METRIC_MIXES[int(rng.integers(len(METRIC_MIXES)))]))
+    rng.shuffle(jobs)
+    if not jobs:
+        return
+
+    svc = PlacementService(
+        _EST, auto_start=False, cross_query=cross_query, double_buffer=double_buffer
+    )
+    futs = []
+    for job in jobs:
+        if job[0] == "score":
+            futs.append(svc.submit_score(job[1], job[2], job[3], job[4]))
+        else:
+            futs.append(svc.submit_estimate(job[1], job[2]))
+    svc.start()
+    got = [f.result(timeout=120) for f in futs]
+    svc.close()
+
+    # how many score requests share each per-structure coalescing group: a
+    # solo request drains at exactly the serial batch shape (bit-identical);
+    # coalesced same-structure requests concatenate into a bigger batch,
+    # where XLA may pick a different dot kernel (1-ulp association diffs)
+    group_count: dict = {}
+    for job in jobs:
+        if job[0] == "score":
+            k = (id(job[1]), job[4])
+            group_count[k] = group_count.get(k, 0) + 1
+
+    for job, have in zip(jobs, got):
+        if job[0] == "score":
+            _, q, c, a, metrics = job
+            want = _EST.score(q, c, a, metrics)
+            assert set(have) == set(want)
+            solo = group_count[(id(q), metrics)] == 1
+            for m in want:
+                if cross_query:
+                    # merged cross-query answers run the signature-banded
+                    # engine: same math, different sweep order
+                    np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
+                elif solo:
+                    # per-structure drains take exactly the serial facade
+                    # path at the serial batch shape: bit-identical
+                    np.testing.assert_array_equal(have[m], want[m], err_msg=m)
+                else:
+                    np.testing.assert_allclose(have[m], want[m], rtol=1e-5, atol=1e-7, err_msg=m)
+        else:
+            _, g, metrics = job
+            want = _EST.estimate(g, metrics)
+            assert set(have) == set(want)
+            for m in want:
+                # coalesced estimates run at the merged batch shape
+                np.testing.assert_allclose(have[m], want[m], rtol=1e-4, atol=1e-5, err_msg=m)
+
+    assert all(f.done() for f in futs), "no lost futures"
+    assert svc.stats.n_requests == len(jobs)
+    assert svc.stats.n_drained == len(jobs), "every request popped into exactly one drain"
+    assert svc.stats.n_rejected == 0
+    assert svc.stats.max_drain <= len(jobs)
+    assert svc.stats.n_batches >= 1
+
+
+# -- satellite 2: concurrency stress + injected failures --------------------------
+
+
+def test_threaded_submit_with_injected_drain_failure():
+    """N producer threads submit while the worker drains; a mid-drain
+    estimator exception must fail exactly its own subgroup's futures, every
+    other future must resolve with the right answer, and the worker must keep
+    serving afterwards."""
+    est = CostEstimator(_models())
+    n_threads, per_thread = 4, 8
+    boom = RuntimeError("injected drain failure")
+    calls = {"n": 0}
+    orig = est.score
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 3:  # mid-drain: earlier groups already launched
+            raise boom
+        return orig(*a, **k)
+
+    est.score = flaky
+    try:
+        # per-structure path (cross_query=False): the injected failure lands in
+        # one structure's subgroup, whose requests alone must see it
+        svc = PlacementService(est, auto_start=True, cross_query=False)
+        futs = [[] for _ in range(n_threads)]
+        meta = [[] for _ in range(n_threads)]
+
+        def producer(t):
+            rng = np.random.default_rng(100 + t)
+            for i in range(per_thread):
+                q, c = _STRUCTURES[(t + i) % len(_STRUCTURES)]
+                a = sample_assignment_matrix(q, c, 3, rng)
+                futs[t].append(svc.submit_score(q, c, a))
+                meta[t].append((q, c, a))
+                time.sleep(0.001)  # interleave with the worker's drains
+
+        threads = [threading.Thread(target=producer, args=(t,)) for t in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+
+        n_ok = n_fail = 0
+        for t in range(n_threads):
+            for fut, (q, c, a) in zip(futs[t], meta[t]):
+                # exception(timeout) blocks until resolution without raising
+                if fut.exception(timeout=120) is None:
+                    have = fut.result()
+                    want = _EST.score(q, c, a)  # same weights, un-patched facade
+                    for m in want:
+                        # same-structure batchmates may coalesce into a bigger
+                        # batch than the serial call: 1-ulp kernel diffs allowed
+                        np.testing.assert_allclose(have[m], want[m], rtol=1e-5, atol=1e-7, err_msg=m)
+                    n_ok += 1
+                else:
+                    assert fut.exception() is boom
+                    n_fail += 1
+        assert n_ok + n_fail == n_threads * per_thread, "every future resolved"
+        assert n_fail >= 1, "the injected failure reached at least one future"
+        assert n_ok >= 1, "batchmates of the failed subgroup survived"
+
+        # the worker survived: it still answers
+        q, c = _STRUCTURES[0]
+        a = sample_assignment_matrix(q, c, 2, np.random.default_rng(0))
+        ok = svc.score(q, c, a)
+        np.testing.assert_allclose(
+            ok["latency_p"], _EST.score(q, c, a)["latency_p"], rtol=1e-5, atol=1e-7
+        )
+        svc.close()
+        assert svc.stats.n_requests == svc.stats.n_drained == n_threads * per_thread + 1
+    finally:
+        est.score = orig
+
+
+@pytest.mark.filterwarnings("ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_death_fails_futures_never_drops_them():
+    """If the worker loop itself dies (a skeleton bug, here injected), every
+    future it owed must fail with the error — and requests queued after the
+    death must be failed by close(), not silently dropped."""
+    est = CostEstimator(_models())
+    svc = PlacementService(est, auto_start=False)
+    crash = RuntimeError("worker skeleton crash")
+
+    def exploding_launch(reqs):
+        raise crash
+
+    svc._launch_group = exploding_launch  # bypasses the per-group error capture
+    q, c = _STRUCTURES[0]
+    a = sample_assignment_matrix(q, c, 2, np.random.default_rng(1))
+    f1 = svc.submit_score(q, c, a)
+    svc.start()
+    with pytest.raises(RuntimeError, match="worker skeleton crash"):
+        f1.result(timeout=60)
+    # the worker thread is dead now; a request that sneaks into the queue
+    # afterwards has no one to serve it -- close() must fail it explicitly
+    svc._thread.join(timeout=60)
+    f2 = svc.submit_score(q, c, a)
+    svc.close()
+    with pytest.raises(RuntimeError, match="worker died before serving"):
+        f2.result(timeout=60)
+
+
+# -- satellite 3: fault-injection -- stalled drains, backpressure, recovery -------
+
+
+def test_stalled_drain_triggers_straggler_and_backpressure_then_recovers():
+    """A deliberately stalled drain (slow forward) must (a) engage the
+    bounded-queue backpressure — rejections, not unbounded latency — and
+    (b) stand out as a latency straggler to the ``launch.faults`` monitor
+    when fed the measured drain latencies; removing the stall must restore
+    steady-state latency and a clean monitor verdict.  All assertions run on
+    harness measurements, never on sleeps."""
+    est = CostEstimator(_models())
+    structures = _STRUCTURES
+    stall_s = 0.25
+    stall = {"s": stall_s}
+    orig = est.score
+
+    def stalled(*a, **k):
+        if stall["s"]:
+            time.sleep(stall["s"])
+        return orig(*a, **k)
+
+    est.score = stalled
+    try:
+        svc = PlacementService(
+            est,
+            auto_start=True,
+            cross_query=False,  # per-structure drains: the stall hits score()
+            max_queue_depth=4,
+            overflow="reject",
+            warmup=structures,
+            warmup_cands=4,
+        )
+        n, rate = 48, 40.0  # 10 arrivals per stalled drain >> depth 4
+        sched = poisson_arrivals(rate, n, seed=3)
+        stream = score_request_stream(structures, n, 2, seed=3, metrics=METRICS)
+
+        stalled_rep = run_open_loop(svc, stream(svc), sched, slo_s=stall_s / 2)
+        assert stalled_rep.n_rejected > 0, "backpressure must shed load at the door"
+        assert stalled_rep.stats.n_rejected == stalled_rep.n_rejected
+        assert stalled_rep.slo_violation_rate > 0.5, "a stalled service cannot meet the SLO"
+        assert stalled_rep.stats.max_queue_depth <= 4 + 1, "the bound held"
+
+        # recovery: remove the stall, same stream, same rate
+        stall["s"] = 0.0
+        svc.stats.reset()
+        recovered = run_open_loop(svc, stream(svc), sched, slo_s=stall_s / 2)
+        svc.close()
+        assert recovered.n_rejected == 0, "steady state needs no shedding"
+        assert recovered.n_answered == n
+        assert recovered.p95_s < stalled_rep.p95_s, "recovery restored tail latency"
+        assert stalled_rep.p50_s > 2 * recovered.p50_s, "the stall dominated latency"
+
+        # the monitor sees the measured drain latencies: the stalled service
+        # is a clear median/MAD outlier against healthy peers, the recovered
+        # one is not (host 0 = this service, hosts 1-3 = healthy peers at the
+        # recovered service's own latency scale)
+        base = recovered.p50_s
+        for phase_p50, expect_straggler in ((stalled_rep.p50_s, True), (base, False)):
+            mon = ClusterMonitor(4, FaultPolicy(straggler_zscore=3.0, straggler_min_steps=3))
+            for step in range(3):
+                mon.report_step(0, phase_p50)
+                for hid, f in ((1, 0.8), (2, 1.0), (3, 1.2)):
+                    mon.report_step(hid, base * f)
+                for hid in range(4):
+                    mon.heartbeat(hid, float(step))
+            verdicts = mon.detect(now=2.0)
+            stragglers = [hid for hid, why in verdicts if why.startswith("straggler")]
+            if expect_straggler:
+                assert stragglers == [0], verdicts
+            else:
+                assert 0 not in stragglers, verdicts
+    finally:
+        est.score = orig
+
+
+# -- satellite 4: deterministic load-harness smoke --------------------------------
+
+
+@pytest.mark.slow
+def test_load_harness_smoke_deterministic_low_rate():
+    """Tiny seeded Poisson run on a warmed service: reproducible request
+    count and schedule, zero SLO violations at a rate the service trivially
+    sustains, monotone latency quantiles."""
+    est = CostEstimator(_models())
+    structures = _STRUCTURES
+    # max_merged_mixes=0: only the warmed full mix may take the merged path,
+    # so no arrival subset can buy a jit compile mid-run; warmup_cands=16
+    # covers the per-structure row buckets any low-rate coalescing can hit
+    svc = PlacementService(
+        est, auto_start=True, warmup=structures, warmup_cands=16, max_merged_mixes=0
+    )
+    # calibrate "low rate" to this machine: arrivals 4x slower than the warm
+    # synchronous latency can serve
+    q, c = structures[0]
+    a = sample_assignment_matrix(q, c, 2, np.random.default_rng(9))
+    t0 = time.perf_counter()
+    svc.score(q, c, a)
+    t_warm = time.perf_counter() - t0
+    rate = max(2.0, 0.25 / t_warm)
+    slo_s = max(1.0, 50 * t_warm)
+    svc.stats.reset()  # the calibration request is not part of the run
+
+    n = 24
+    sched = poisson_arrivals(rate, n, seed=5)
+    np.testing.assert_array_equal(sched, poisson_arrivals(rate, n, seed=5))
+    np.testing.assert_array_equal(
+        bursty_arrivals(rate, n, seed=5), bursty_arrivals(rate, n, seed=5)
+    )
+    stream = score_request_stream(structures, n, 2, seed=5, metrics=METRICS)
+    rep = run_open_loop(svc, stream(svc), sched, slo_s=slo_s)
+    svc.close()
+    assert rep.n_requests == n and rep.n_answered == n
+    assert rep.n_rejected == 0 and rep.n_failed == 0
+    assert rep.n_slo_violations == 0, f"low-rate run violated its SLO: {rep.summary()}"
+    assert rep.p50_s <= rep.p95_s <= rep.p99_s
+    assert np.isfinite(rep.latencies_s).all() and (rep.latencies_s > 0).all()
+    assert rep.stats.n_drained == n
