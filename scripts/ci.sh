@@ -9,6 +9,20 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== dispatch autotune (quick) =="
+# the host-calibration path must work end to end on this container: a quick
+# autotune under a wall-clock budget emits a profile that validates, and a
+# second run must be a cached no-op (same host + valid profile => no probes)
+DISPATCH_PROFILE_OUT="$(mktemp -d)/dispatch_profile.json"
+python -m repro.serve.policy --quick --budget-s 120 --out "$DISPATCH_PROFILE_OUT"
+python -m repro.serve.policy --validate "$DISPATCH_PROFILE_OUT"
+python -m repro.serve.policy --quick --budget-s 120 --out "$DISPATCH_PROFILE_OUT" --expect-cached
+
+# every perf gate below compares against baselines recorded under the
+# built-in DispatchPolicy defaults; pin them so a tuned profile in this
+# host's ~/.cache/repro/dispatch can never skew a gated ratio
+export REPRO_DISPATCH_PROFILE=default
+
 echo "== placement scoring perf (quick) =="
 # the fast path must build each candidate graph exactly once (asserted inside),
 # stay well ahead of the seed per-metric-rebuild path, and the fused/pallas

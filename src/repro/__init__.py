@@ -11,23 +11,28 @@ it (docs/api.md):
     CostEstimator       the single inference facade (estimate/score/optimize)
     PlacementService    micro-batching front-end for concurrent requests
     PlacementOptimizer  search strategy layer (sample -> score -> refine)
+    DispatchPolicy      host-calibrated dispatch tunables (docs/dispatch.md)
 
 Deeper layers (``repro.core`` engine, ``repro.dsps`` substrate,
 ``repro.training`` loops, ``repro.kernels`` Pallas kernels) remain importable
 directly but are not version-stable.
+
+0.7 removed the deprecated ``core.model.predict_*`` shims; the facade is the
+one inference surface (docs/api.md).
 """
 
-__version__ = "0.5.0"
+__version__ = "0.7.0"
 
 from repro.core.model import CostModelConfig
 from repro.dsps.generator import WorkloadGenerator
-from repro.serve import CostEstimator, CostModelBundle, PlacementService
+from repro.serve import CostEstimator, CostModelBundle, DispatchPolicy, PlacementService
 from repro.placement.optimizer import PlacementOptimizer
 
 __all__ = [
     "CostEstimator",
     "CostModelBundle",
     "CostModelConfig",
+    "DispatchPolicy",
     "PlacementOptimizer",
     "PlacementService",
     "WorkloadGenerator",

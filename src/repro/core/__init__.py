@@ -56,10 +56,6 @@ from repro.core.model import (
     loss_fn,
     msle_loss,
     bce_loss,
-    predict,
-    predict_metrics,
-    predict_placements,
-    predict_proba,
     label_array,
 )
 from repro.core.metrics import qerror, qerror_summary, accuracy, balanced_indices

@@ -226,16 +226,22 @@ def exact_banding(g) -> BatchBanding:
 # (flavor, signature-set) -> BatchBanding.  Bands are pure functions of the
 # signature set, so one cache serves every consumer (dataset buckets,
 # zero-copy views, merged serving chunks) and bounds both recomputation and
-# jit retraces.
+# jit retraces.  Capacity comes from the active DispatchPolicy
+# (``banding_cache_size``; sizing rationale in serve/policy.py).
 _BANDING_CACHE: dict = {}
-_BANDING_CACHE_MAX = 512
+
+
+def _banding_cache_capacity() -> int:
+    from repro.serve.policy import active_policy  # lazy: core never pulls serve at import
+
+    return active_policy().banding_cache_size
 
 
 def _banding_cached(g, flavor: str, compute) -> BatchBanding:
     key = (flavor, batch_signature(g))
     hit = _BANDING_CACHE.get(key)
     if hit is None:
-        if len(_BANDING_CACHE) >= _BANDING_CACHE_MAX:
+        if len(_BANDING_CACHE) >= _banding_cache_capacity():
             _BANDING_CACHE.clear()  # tiny entries; full reset beats LRU churn
         hit = _BANDING_CACHE[key] = compute(g)
     return hit

@@ -416,7 +416,7 @@ def apply_gnn_stacked(
     """ONE forward for member-stacked params over a shared graph batch.
 
     ``params`` leaves carry a leading member axis (an ensemble's members, or
-    several metrics' ensembles concatenated by ``model.stack_metric_models``);
+    several metrics' ensembles concatenated by ``serve.stacking.stack_metric_models``);
     returns ``(members, B)`` raw outputs.  The batch — including its banding
     plan — is shared across members, so a training step issues one stacked
     forward instead of one per member.
@@ -646,11 +646,11 @@ def apply_gnn_placed_stacked(
     static: QueryStatic,
     cfg: GNNConfig,
     n_hw: int,
-    chunk: int = 256,
+    chunk: Optional[int] = None,
 ) -> jax.Array:
     """ONE forward for a whole stack of ensembles: ``params`` leaves carry a
     leading member axis (ensemble members x metrics, see
-    ``model.stack_metric_models``); returns ``(members, B)`` raw outputs.
+    ``serve.stacking.stack_metric_models``); returns ``(members, B)`` raw outputs.
 
     Beyond fusing the per-(metric, member) launches of ``apply_gnn_placed``
     into one vmapped call per stage, the restructure buys two things the
@@ -664,13 +664,20 @@ def apply_gnn_placed_stacked(
       * **batch chunking** — with all members resident at once, the candidate
         axis is scanned in ``chunk``-sized panels so the per-stage activation
         working set stays cache-resident on CPU-class backends (a no-op for
-        ``B <= chunk``; pass ``chunk=0`` to disable).
+        ``B <= chunk``; pass ``chunk=0`` to disable).  ``chunk=None`` (the
+        default) reads the active ``DispatchPolicy``'s ``score_chunk`` —
+        callers that thread an explicit policy (the serving facade) pass the
+        width themselves.
 
     ``cfg.use_pallas`` routes through the same kernels as
     ``apply_gnn_placed``, with the trimmed type runs as the kernels' slot
     layout and each stage-3 depth level as a static ``row_span`` for
     ``mp_update`` (the depth-major trimmed order makes levels contiguous).
     """
+    if chunk is None:
+        from repro.serve.policy import active_policy  # lazy: core never pulls serve at import
+
+        chunk = active_policy().score_chunk
     order, ranges, updates, levels = _trimmed_layout(static)
     idx = jnp.asarray(order)
     op_x = skel.op_x[idx]  # (n, F)

@@ -6,13 +6,18 @@ log1p space, classification (backpressure occurrence, query success) trained
 with BCE. Ensembles of E members (different init seeds) are vmap-stacked;
 inference takes the mean (regression) / majority vote (classification) exactly
 as SIV-A prescribes.
+
+Since repro 0.7 this module is the NUMERIC CORE only: configs, init, the
+ensemble forward, and the losses.  Everything serving-flavored moved out —
+inference voting and multi-metric stacking live in ``repro.serve.stacking``,
+and the one inference surface is ``repro.serve.CostEstimator`` (docs/api.md;
+the interim ``predict_*`` deprecation shims were removed at the 0.7 horizon).
 """
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +31,7 @@ from repro.core.gnn import (
     apply_gnn_traditional,
     init_gnn,
 )
-from repro.core.graph import BatchBanding, JointGraph, QueryStatic
+from repro.core.graph import BatchBanding, JointGraph
 
 REGRESSION_METRICS = ("throughput", "latency_p", "latency_e")
 CLASSIFICATION_METRICS = ("backpressure", "success")
@@ -115,158 +120,5 @@ def ensemble_loss(
     return jnp.sum(per_member)
 
 
-# -- inference voting -------------------------------------------------------------
-
-
-def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
-    """(E, B) raw outputs -> cost-space prediction (paper SIV-A).
-
-    regression: mean over members of expm1(raw); classification: majority vote
-    over thresholded member probabilities -> {0,1}.
-    """
-    if cfg.task == "regression":
-        return np.mean(np.expm1(raw), axis=0).clip(min=0.0)
-    votes = (raw > 0.0).astype(np.int64)  # logit > 0 <=> p > 0.5
-    return (votes.sum(axis=0) * 2 > votes.shape[0]).astype(np.int64)
-
-
-# -- fused multi-metric ensembles -------------------------------------------------
-#
-# The per-metric GNNs share one architecture (paper SIV-A: same GNNConfig,
-# different training targets), so their ensemble params are shape-identical
-# pytrees with a leading (E,) member axis.  Stacking them along that axis
-# turns "one forward per (metric, member)" into ONE vmapped forward whose
-# leading axis is sum(E_m) — a single kernel launch per GNN stage instead of
-# len(metrics) * E launches, which is where placement scoring spends its time
-# (dispatch overhead dominates these small graphs).
-
-
-class StackedEnsembles(NamedTuple):
-    """Per-metric ensembles fused along the leading member axis.
-
-    ``params`` leaves have shape ``(sum of member counts, ...)``; metric ``m``
-    owns rows ``[offsets[i], offsets[i] + sizes[i])``.  Hashable-free (holds
-    arrays), so it is passed positionally into jitted forwards that are cached
-    on the shared ``GNNConfig`` instead.
-    """
-
-    params: object  # pytree, leaves stacked along axis 0
-    metrics: Tuple[str, ...]
-    cfgs: Tuple[CostModelConfig, ...]
-    sizes: Tuple[int, ...]  # members per metric, in ``metrics`` order
-
-
-def stack_metric_models(
-    models: Dict[str, Tuple[object, CostModelConfig]],
-    metrics: Optional[Sequence[str]] = None,
-) -> StackedEnsembles:
-    """Fuse several per-metric (params, cfg) ensembles into one stack.
-
-    Requires every model to share the same ``GNNConfig`` and ``traditional_mp``
-    flag (the forwards must be structurally identical to share a trace);
-    raises ``ValueError`` otherwise so callers can fall back to the per-metric
-    loop explicitly.  Member counts may differ — leaves are concatenated, not
-    stacked, so metric i contributes ``sizes[i]`` rows.
-    """
-    names = tuple(metrics) if metrics is not None else tuple(models)
-    assert names, "no metrics to stack"
-    cfgs = tuple(models[m][1] for m in names)
-    for c in cfgs[1:]:
-        if c.gnn != cfgs[0].gnn or c.traditional_mp != cfgs[0].traditional_mp:
-            raise ValueError(
-                "cannot fuse metric ensembles with differing GNN configs: "
-                f"{cfgs[0].metric}={cfgs[0].gnn} vs {c.metric}={c.gnn} "
-                f"(traditional_mp {cfgs[0].traditional_mp} vs {c.traditional_mp})"
-            )
-    sizes = []
-    for m in names:
-        leaf = jax.tree_util.tree_leaves(models[m][0])[0]
-        sizes.append(int(leaf.shape[0]))
-    stacked = jax.tree_util.tree_map(
-        lambda *leaves: jnp.concatenate([jnp.asarray(l) for l in leaves], axis=0),
-        *[models[m][0] for m in names],
-    )
-    return StackedEnsembles(stacked, names, cfgs, tuple(sizes))
-
-
-def _split_votes(raw: np.ndarray, stacked: StackedEnsembles) -> Dict[str, np.ndarray]:
-    """(sum_E, B) fused raw outputs -> per-metric cost-space predictions."""
-    out, off = {}, 0
-    for m, cfg, sz in zip(stacked.metrics, stacked.cfgs, stacked.sizes):
-        out[m] = _ensemble_vote(raw[off : off + sz], cfg)
-        off += sz
-    return out
-
-
 def label_array(traces, metric: str) -> np.ndarray:
     return np.asarray([t.labels.as_dict()[metric] for t in traces], dtype=np.float32)
-
-
-# -- deprecated inference entry points --------------------------------------------
-#
-# The serving API moved behind ``repro.serve.CostEstimator`` (docs/api.md):
-# the facade owns the skeleton/stack caches and the jitted-forward trace
-# caches that used to live at this module's level.  The wrappers below keep
-# the old call signatures alive for out-of-tree users: each delegates to the
-# SAME serving machinery (shim output == facade output, test-pinned) and
-# warns ONCE per process.  Removal horizon: docs/api.md#deprecations.
-
-_DEPRECATION_WARNED: set = set()
-
-
-def _warn_deprecated(name: str, replacement: str) -> None:
-    if name in _DEPRECATION_WARNED:
-        return
-    _DEPRECATION_WARNED.add(name)
-    warnings.warn(
-        f"repro.core.model.{name} is deprecated; use {replacement} "
-        "(docs/api.md#deprecations)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
-    """Deprecated: use ``repro.serve.CostEstimator.estimate``."""
-    _warn_deprecated("predict", "repro.serve.CostEstimator.estimate")
-    from repro.serve import estimator as _serve
-
-    return _serve.ensemble_predict(params, g, cfg)
-
-
-def predict_proba(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
-    """Deprecated: use ``repro.serve.CostEstimator.proba``."""
-    _warn_deprecated("predict_proba", "repro.serve.CostEstimator.proba")
-    from repro.serve import estimator as _serve
-
-    return _serve.ensemble_proba(params, g, cfg)
-
-
-def predict_metrics(
-    models: Dict[str, Tuple[object, CostModelConfig]], g: JointGraph
-) -> Dict[str, np.ndarray]:
-    """Deprecated: use ``repro.serve.CostEstimator.estimate``."""
-    _warn_deprecated("predict_metrics", "repro.serve.CostEstimator.estimate")
-    from repro.serve import CostEstimator
-
-    return CostEstimator(models).estimate(g)
-
-
-def predict_placements(
-    params, skel: JointGraph, a_place: jax.Array, static: QueryStatic, cfg: CostModelConfig
-) -> np.ndarray:
-    """Deprecated: use ``repro.serve.CostEstimator.score``."""
-    _warn_deprecated("predict_placements", "repro.serve.CostEstimator.score")
-    from repro.serve import estimator as _serve
-
-    return _serve.placed_predict(params, skel, a_place, static, cfg)
-
-
-def predict_placements_fused(
-    stacked: StackedEnsembles, skel: JointGraph, a_place: jax.Array, static: QueryStatic
-) -> Dict[str, np.ndarray]:
-    """Deprecated: use ``repro.serve.CostEstimator.score``."""
-    _warn_deprecated("predict_placements_fused", "repro.serve.CostEstimator.score")
-    from repro.serve import estimator as _serve
-
-    return _serve.placed_predict_fused(stacked, skel, a_place, static)

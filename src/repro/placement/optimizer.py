@@ -120,18 +120,25 @@ class PlacementOptimizer:
         query: Query,
         cluster: Cluster,
         target_metric: str = "latency_p",
-        k: int = 64,
+        k: Optional[int] = None,
         rng: Optional[np.random.Generator] = None,
         minimize: Optional[bool] = None,
         require_feasible: bool = True,
         refine_rounds: int = 0,
-        refine_top: int = 8,
+        refine_top: Optional[int] = None,
         refine_mutations: int = 4,
     ) -> OptimizerResult:
         """``refine_rounds`` is opt-in: hill-climbing maximizes the *predicted*
         objective, which with a weak model can chase model error instead of
         real cost. Enable it (2-3 rounds) for well-trained ensembles or
-        oracle scorers; the default matches the paper's sample-and-argopt."""
+        oracle scorers; the default matches the paper's sample-and-argopt.
+
+        ``k`` (candidate pool) and ``refine_top`` (elites per round) default
+        from the estimator's ``DispatchPolicy`` (``search_k``/``refine_top``):
+        search breadth is a cost/accuracy dial the host profile owns."""
+        policy = self.estimator.policy
+        k = policy.search_k if k is None else k
+        refine_top = policy.refine_top if refine_top is None else refine_top
         rng = rng or np.random.default_rng(0)
         pool = sample_assignment_matrix(query, cluster, k, rng)
         assert len(pool), "no valid placement candidates found"

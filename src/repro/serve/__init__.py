@@ -8,6 +8,12 @@ The stable online API (docs/api.md) is three objects:
   / ``optimize``) constructed from a bundle, owning all serving caches;
 * ``PlacementService`` — the micro-batching front-end that coalesces
   concurrent requests into fused bucket-padded forwards.
+
+Dispatch tunables (routing crossovers, chunk widths, cache capacities) live
+on ``DispatchPolicy`` (serve/policy.py): ``autotune()`` calibrates them to
+the running host, ``resolve_policy()`` applies the persisted profile / env
+override, and ``stacking`` holds the fused multi-metric ensemble helpers
+retired out of ``core/model.py`` in 0.7.
 """
 
 from repro.serve.bundle import (
@@ -21,6 +27,19 @@ from repro.serve.bundle import (
     merge_bundles,
 )
 from repro.serve.estimator import CostEstimator, DeferredResult
+from repro.serve.policy import (
+    AutotuneResult,
+    DispatchPolicy,
+    active_policy,
+    autotune,
+    host_fingerprint,
+    load_profile,
+    profile_path,
+    resolve_policy,
+    save_profile,
+    use_policy,
+)
+from repro.serve.stacking import StackedEnsembles, stack_metric_models
 from repro.serve.load import (
     KneePoint,
     LoadReport,
@@ -34,25 +53,36 @@ from repro.serve.load import (
 from repro.serve.service import PlacementService, ServiceOverloadError, ServiceStats
 
 __all__ = [
+    "AutotuneResult",
     "BUNDLE_SCHEMA_VERSION",
     "BundleVersionError",
     "CostModelBundle",
     "CostEstimator",
     "DeferredResult",
+    "DispatchPolicy",
     "KneePoint",
     "LazyModels",
     "LoadReport",
     "PlacementService",
     "ServiceOverloadError",
     "ServiceStats",
+    "StackedEnsembles",
+    "active_policy",
+    "autotune",
     "bundle_from_checkpoint",
     "bursty_arrivals",
     "corpus_fingerprint",
     "find_knee",
+    "host_fingerprint",
     "latency_quantiles",
     "layout_descriptor",
+    "load_profile",
     "merge_bundles",
     "poisson_arrivals",
-    "run_open_loop",
+    "profile_path",
+    "resolve_policy",
+    "save_profile",
     "score_request_stream",
+    "stack_metric_models",
+    "use_policy",
 ]

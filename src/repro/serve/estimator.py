@@ -18,8 +18,13 @@ and module-level dicts in ``core/model.py``:
   (moved from ``core/model.py``): a trace is a pure function of (config,
   query structure, shapes, kernel lowering) — never of the estimator
   instance — so sharing them across estimators only deduplicates
-  compilation, and the deprecation shims in ``core/model.py`` hit the same
-  warm caches as the facade.
+  compilation.
+
+Every dispatch tunable (chunk widths, cache capacities, routing crossovers)
+comes from a ``serve.policy.DispatchPolicy`` — pass ``policy=`` or let the
+constructor resolve the host profile / env override (``resolve_policy``).
+The policy only moves performance knobs; predictions are policy-invariant
+(test-pinned).
 
 Scoring numerics are unchanged from the pre-facade path: docs/api.md is the
 surface reference, docs/placement_search.md + docs/forward_engine.md the
@@ -28,10 +33,11 @@ engine internals.
 
 from __future__ import annotations
 
+import threading
 import warnings
 from collections import OrderedDict
 from collections.abc import Mapping
-from functools import lru_cache
+from functools import lru_cache, wraps  # lru_cache re-exported for tests/tools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -55,15 +61,15 @@ from repro.core.graph import (
     query_static,
     skeleton_cache_key,
 )
-from repro.core.model import (
-    CostModelConfig,
+from repro.core.model import CostModelConfig, forward_ensemble
+from repro.kernels import active_lowering
+from repro.serve.policy import DispatchPolicy, active_policy, resolve_policy
+from repro.serve.stacking import (
     StackedEnsembles,
     _ensemble_vote,
     _split_votes,
-    forward_ensemble,
     stack_metric_models,
 )
-from repro.kernels import active_lowering
 
 # -- jitted forward caches --------------------------------------------------------
 #
@@ -71,13 +77,47 @@ from repro.kernels import active_lowering
 # the lowering is read at trace time, so without it a flipped
 # REPRO_PALLAS_INTERPRET after the first call would silently reuse stale traces.
 
+_MISS = object()
 
-@lru_cache(maxsize=64)
+
+def _policy_lru(fn):
+    """``lru_cache`` whose capacity tracks the active ``DispatchPolicy``.
+
+    All four trace-factory caches share ONE capacity knob
+    (``trace_cache_size``; sizing rationale in serve/policy.py) instead of
+    the old scattered ``maxsize=64/128/256`` literals.  Capacity is read at
+    insertion time, so installing a tuned profile resizes the caches without
+    a process restart.  Matches the ``functools`` surface the tests touch:
+    ``__wrapped__`` and ``cache_clear``.
+    """
+    cache: "OrderedDict[Tuple, object]" = OrderedDict()
+    lock = threading.Lock()
+
+    @wraps(fn)
+    def wrapper(*args):
+        with lock:
+            hit = cache.get(args, _MISS)
+            if hit is not _MISS:
+                cache.move_to_end(args)
+                return hit
+        value = fn(*args)  # outside the lock: jax.jit wrapping is reentrant
+        with lock:
+            cache[args] = value
+            cap = active_policy().trace_cache_size
+            while len(cache) > cap:
+                cache.popitem(last=False)
+        return value
+
+    wrapper.cache_clear = cache.clear
+    return wrapper
+
+
+@_policy_lru
 def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
 
 
-@lru_cache(maxsize=128)
+@_policy_lru
 def _jitted_forward_stacked(
     gnn,
     traditional_mp: bool,
@@ -91,7 +131,7 @@ def _jitted_forward_stacked(
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg, banding))
 
 
-@lru_cache(maxsize=256)
+@_policy_lru
 def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: str = "ref"):
     def f(p, skel, a_place):
         return jax.vmap(
@@ -101,17 +141,19 @@ def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: 
     return jax.jit(f)
 
 
-@lru_cache(maxsize=256)
+@_policy_lru
 def _jitted_placed_forward_stacked(
-    gnn, static: QueryStatic, n_hw: int, lowering: str = "ref"
+    gnn, static: QueryStatic, n_hw: int, chunk: int = 0, lowering: str = "ref"
 ):
+    # ``chunk`` (the policy's score_chunk) joins the key: the scan structure
+    # it selects is part of the trace, exactly like a shape.
     def f(p, skel, a_place):
-        return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw)
+        return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw, chunk)
 
     return jax.jit(f)
 
 
-@lru_cache(maxsize=128)
+@_policy_lru
 def _jitted_merged_forward(gnn, banding: BatchBanding, max_parents: int, lowering: str = "ref"):
     # the cross-query engine: S deduped skeletons + per-row (skel_id,
     # a_place); banding is the drain's signature-exact static plan
@@ -153,9 +195,8 @@ def _maybe_defer(finalize, deferred: bool):
 
 # -- stateless scoring primitives -------------------------------------------------
 #
-# The numeric cores behind the facade methods AND the core.model deprecation
-# shims.  Prefer the CostEstimator methods: these take raw params and do no
-# skeleton/stack caching.
+# The numeric cores behind the facade methods.  Prefer the CostEstimator
+# methods: these take raw params and do no skeleton/stack caching.
 
 
 def ensemble_predict(params, g: JointGraph, cfg: CostModelConfig) -> np.ndarray:
@@ -194,6 +235,7 @@ def placed_predict_fused(
     a_place: jax.Array,
     static: QueryStatic,
     deferred: bool = False,
+    chunk: Optional[int] = None,
 ) -> Dict[str, np.ndarray]:
     """All metrics' ensembles over one query's candidate placements, fused.
 
@@ -208,8 +250,10 @@ def placed_predict_fused(
         "use the generic path for traditional_mp models"
     )
     n_hw = int(np.asarray(skel.hw_mask).sum())
+    if chunk is None:
+        chunk = active_policy().score_chunk
     fwd = _jitted_placed_forward_stacked(
-        stacked.cfgs[0].gnn, static, n_hw, active_lowering()
+        stacked.cfgs[0].gnn, static, n_hw, chunk, active_lowering()
     )
     raw = fwd(stacked.params, skel, a_place)
     return _maybe_defer(lambda: _split_votes(np.asarray(raw), stacked), deferred)
@@ -223,18 +267,26 @@ class CostEstimator:
 
     ``models``: dict metric -> (params, CostModelConfig), exactly the shape
     ``CostModelBundle.models`` carries (``from_bundle`` is the one-liner).
+    ``policy``: a ``DispatchPolicy``; omitted, the host profile / env
+    override resolves one (``serve.policy.resolve_policy``).
     Thread-safety: individual calls are safe to issue from one thread at a
     time; ``PlacementService`` adds the concurrent micro-batching front-end.
     """
 
-    skeleton_cache_size = 64  # (query, cluster) pairs kept device-resident
-
-    def __init__(self, models: Dict[str, Tuple[object, CostModelConfig]], meta=None):
+    def __init__(
+        self,
+        models: Dict[str, Tuple[object, CostModelConfig]],
+        meta=None,
+        policy: Optional[DispatchPolicy] = None,
+    ):
         # plain dicts are copied (callers may mutate theirs); other Mappings
         # (bundle.LazyModels) pass through so laziness survives the facade
         self.models = dict(models) if type(models) is dict else models
         assert isinstance(self.models, Mapping), type(models)
         self.meta = dict(meta or {})
+        self.policy = (policy if policy is not None else resolve_policy()).validate()
+        # (query, cluster) pairs kept device-resident
+        self.skeleton_cache_size = self.policy.skeleton_cache_size
         self._skeletons: "OrderedDict[Tuple, Tuple[JointGraph, JointGraph, QueryStatic]]" = (
             OrderedDict()
         )
@@ -246,7 +298,12 @@ class CostEstimator:
         self._optimizer = None
 
     @classmethod
-    def from_bundle(cls, bundle, corpus_fingerprint: Optional[str] = None) -> "CostEstimator":
+    def from_bundle(
+        cls,
+        bundle,
+        corpus_fingerprint: Optional[str] = None,
+        policy: Optional[DispatchPolicy] = None,
+    ) -> "CostEstimator":
         """Facade over a bundle's models (laziness preserved).
 
         ``corpus_fingerprint`` (see ``bundle.corpus_fingerprint``) is the
@@ -269,7 +326,7 @@ class CostEstimator:
                 "against data the models never saw (provenance mismatch)",
                 stacklevel=2,
             )
-        return cls(bundle.models, meta=meta)
+        return cls(bundle.models, meta=meta, policy=policy)
 
     @property
     def metrics(self) -> Tuple[str, ...]:
@@ -415,7 +472,8 @@ class CostEstimator:
             a_place = jnp.asarray(a_place)
             if stacked is not None:
                 pending = placed_predict_fused(
-                    stacked, skel, a_place, static, deferred=True
+                    stacked, skel, a_place, static, deferred=True,
+                    chunk=self.policy.score_chunk,
                 )
                 return _maybe_defer(
                     lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
@@ -698,7 +756,7 @@ class CostEstimator:
         max_parents = int(np.asarray(skels.a_flow).sum(axis=-2).max(initial=1))
         entry = (index_of, jax.tree_util.tree_map(jnp.asarray, skels), banding, max_parents)
         self._merged_groups[mix_key] = entry
-        while len(self._merged_groups) > 32:
+        while len(self._merged_groups) > self.policy.merged_group_cache_size:
             self._merged_groups.popitem(last=False)
         return entry
 

@@ -1,0 +1,585 @@
+"""``DispatchPolicy``: every serving dispatch tunable in ONE calibrated object.
+
+COSTREAM's pitch is cheap, accurate cost estimates on *heterogeneous*
+hardware — yet a serving stack that hardcodes its own performance crossovers
+(merged-vs-per-structure row limit, chunk widths, cache capacities) is
+implicitly calibrated to whatever container those constants were measured on.
+This module makes the dispatch layer hold itself to the same standard as the
+model it serves (the retrofitting playbook in PAPERS.md): all tunables live
+on a frozen, JSON-serializable ``DispatchPolicy``, and ``autotune()``
+measures the real crossovers on the running host with short seeded probes.
+
+The policy is strictly a *performance* object: any valid policy yields
+float-identical ``score``/``estimate`` results (test-pinned) — it decides how
+work is batched, routed, chunked, and cached, never what is computed.
+
+Resolution order (``resolve_policy``), applied by ``CostEstimator`` /
+``PlacementService`` when constructed without an explicit ``policy=``:
+
+1. ``REPRO_DISPATCH_PROFILE`` env var — ``"default"`` (or ``"none"``/``"0"``)
+   pins the built-in defaults (CI and tests use this so routing assertions
+   and perf baselines stay comparable across containers); any other value is
+   a profile JSON path, loaded without a host check (an explicit pin);
+2. the per-host profile cache ``~/.cache/repro/dispatch/<fingerprint>.json``
+   written by ``autotune()`` — loaded only when its recorded host
+   fingerprint matches this machine (a copied cache directory silently
+   falling back to defaults instead of mis-tuning);
+3. the built-in defaults.
+
+Cache-capacity sizing rationale (the ONE place these numbers live): each
+capacity scales with rebuild-cost over per-entry footprint.  Jit traces are
+the most expensive entries to lose (a recompile costs seconds) and the
+cheapest to keep (a host-side callable), so ``trace_cache_size`` anchors the
+budget; banding plans are tiny pure-Python tuples (2x traces); featurized
+skeletons hold device-resident arrays (trace/4); merged cross-query groups
+hold a whole device skeleton *stack* per entry (trace/8).
+
+CLI (used by ``scripts/ci.sh``)::
+
+    python -m repro.serve.policy --quick [--out PATH] [--budget-s S]
+        [--expect-cached]   # fail if a probe ran (the profile must be warm)
+    python -m repro.serve.policy --validate PATH
+
+Methodology and field reference: docs/dispatch.md.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import json
+import os
+import platform
+import time
+from dataclasses import asdict, dataclass, fields, replace
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+#: Bump when the profile JSON layout changes; older profiles are ignored
+#: (fall back to defaults), never misread.
+PROFILE_SCHEMA_VERSION = 1
+
+#: Env var: "default"/"none"/"0" pins built-in defaults; otherwise a path.
+PROFILE_ENV = "REPRO_DISPATCH_PROFILE"
+
+_DEFAULT_CACHE_DIR = Path("~/.cache/repro/dispatch")
+
+
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """Every tunable the serving stack used to inline as a magic constant.
+
+    Frozen and hashable: a policy can key caches and ride jit-trace keys.
+    All fields are performance knobs — see the module docstring for the
+    invariant (results never depend on the policy) and docs/dispatch.md for
+    the per-field methodology.
+    """
+
+    # -- routing crossovers (host-measurable; autotune targets) -----------------
+    #: Merged-vs-per-structure drain crossover: a score drain averaging at
+    #: most this many candidate rows per structure is dispatch-bound and
+    #: merges into one cross-query forward; above it, per-structure
+    #: specialized forwards win their dispatch back.  None: always merge.
+    cross_query_row_limit: Optional[int] = 16
+    #: Candidate-panel width of the placed stacked forward
+    #: (``gnn.apply_gnn_placed_stacked``): the scan chunk that keeps the
+    #: per-stage activation working set cache-resident.  0 disables chunking.
+    score_chunk: int = 256
+    # -- batching ----------------------------------------------------------------
+    #: Rows (score) / graphs (estimate) per fused forward; oversized drains
+    #: are chunked to this width (``PlacementService.max_batch`` and the
+    #: estimator's ``max_rows``).
+    max_batch: int = 1024
+    #: First-seen runtime structure mixes admitted to the merged path
+    #: (compile-cache bound under open-loop arrivals).  None: unbounded.
+    max_merged_mixes: Optional[int] = 32
+    #: Drain pipelining: None = auto (on for accelerator backends, off on
+    #: CPU where host and device share cores); True/False forces.
+    double_buffer: Optional[bool] = None
+    #: ``start()`` warmup breadth: candidate buckets pre-compiled per warmed
+    #: structure (powers of two up to this).
+    warmup_cands: int = 8
+    # -- placement search --------------------------------------------------------
+    #: Default candidate-sample size of ``PlacementOptimizer.optimize``.
+    search_k: int = 64
+    #: Elites mutated per hill-climb refinement round (the refinement top-k).
+    refine_top: int = 8
+    # -- cache capacities (sizing rationale: module docstring) -------------------
+    #: Jitted-forward trace entries (all module-level trace caches in
+    #: ``serve.estimator`` share this budget anchor).
+    trace_cache_size: int = 256
+    #: Stage-3 banding plans (``core.bucketing``): tiny tuples, 2x traces.
+    banding_cache_size: int = 512
+    #: Device-resident (query, cluster) skeleton entries: trace/4.
+    skeleton_cache_size: int = 64
+    #: Merged cross-query groups (device skeleton stacks): trace/8.
+    merged_group_cache_size: int = 32
+
+    # -- validation / serialization ---------------------------------------------
+
+    def validate(self) -> "DispatchPolicy":
+        """Raise ``ValueError`` on an out-of-range field; return self."""
+
+        def _positive(name: str, allow_none: bool = False, allow_zero: bool = False):
+            v = getattr(self, name)
+            if v is None:
+                if not allow_none:
+                    raise ValueError(f"DispatchPolicy.{name} must not be None")
+                return
+            if not isinstance(v, int) or isinstance(v, bool):
+                raise ValueError(f"DispatchPolicy.{name} must be an int, got {v!r}")
+            if v < 0 or (v == 0 and not allow_zero):
+                raise ValueError(f"DispatchPolicy.{name} must be positive, got {v}")
+
+        _positive("cross_query_row_limit", allow_none=True, allow_zero=True)
+        _positive("score_chunk", allow_zero=True)
+        _positive("max_batch")
+        _positive("max_merged_mixes", allow_none=True, allow_zero=True)
+        _positive("warmup_cands")
+        _positive("search_k")
+        _positive("refine_top")
+        _positive("trace_cache_size")
+        _positive("banding_cache_size")
+        _positive("skeleton_cache_size")
+        _positive("merged_group_cache_size")
+        if self.double_buffer not in (None, True, False):
+            raise ValueError(
+                f"DispatchPolicy.double_buffer must be None/True/False, "
+                f"got {self.double_buffer!r}"
+            )
+        return self
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "DispatchPolicy":
+        """Strict inverse of ``to_dict``: unknown keys raise (schema guard)."""
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown DispatchPolicy fields: {sorted(unknown)}")
+        return cls(**d).validate()
+
+    def resolved_double_buffer(self) -> bool:
+        """The backend-auto rule, applied: launch-ahead only pays where device
+        compute runs beside the host; on CPU they share cores, so the split
+        just fragments drains (measured in serve_bench)."""
+        if self.double_buffer is not None:
+            return bool(self.double_buffer)
+        import jax
+
+        return jax.default_backend() != "cpu"
+
+
+# -- host identity ----------------------------------------------------------------
+
+
+def host_descriptor() -> Dict[str, object]:
+    """The hardware/runtime identity a tuned profile is valid for."""
+    import jax
+
+    return {
+        "node": platform.node(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+def host_fingerprint(descriptor: Optional[Dict] = None) -> str:
+    """Stable digest of ``host_descriptor()`` — the profile cache key."""
+    d = descriptor if descriptor is not None else host_descriptor()
+    blob = json.dumps(d, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def profile_path(fingerprint: Optional[str] = None) -> Path:
+    """The per-host profile cache location (ignores the env override)."""
+    fp = fingerprint if fingerprint is not None else host_fingerprint()
+    return _DEFAULT_CACHE_DIR.expanduser() / f"{fp}.json"
+
+
+# -- profile persistence ----------------------------------------------------------
+
+
+def save_profile(
+    path,
+    policy: DispatchPolicy,
+    measurements: Optional[Dict] = None,
+    descriptor: Optional[Dict] = None,
+) -> Path:
+    """Write a host-stamped profile JSON (parents created, atomic rename)."""
+    policy.validate()
+    d = descriptor if descriptor is not None else host_descriptor()
+    payload = {
+        "schema_version": PROFILE_SCHEMA_VERSION,
+        "host_fingerprint": host_fingerprint(d),
+        "host": d,
+        "policy": policy.to_dict(),
+        "measurements": measurements or {},
+    }
+    path = Path(path).expanduser()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(payload, indent=2, sort_keys=True))
+    tmp.replace(path)
+    return path
+
+
+def load_profile(path, require_host_match: bool = True) -> Optional[Dict]:
+    """Parsed+validated profile dict, or None when it must not be used.
+
+    ``None`` — never an exception — on: missing file, unparseable JSON,
+    schema-version mismatch, invalid policy fields, or (when
+    ``require_host_match``) a recorded fingerprint from another machine.  A
+    stale or foreign profile silently falls back to defaults instead of
+    mis-tuning this host.
+    """
+    path = Path(path).expanduser()
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict):
+        return None
+    if payload.get("schema_version") != PROFILE_SCHEMA_VERSION:
+        return None
+    try:
+        policy = DispatchPolicy.from_dict(payload.get("policy", {}))
+    except (TypeError, ValueError):
+        return None
+    if require_host_match and payload.get("host_fingerprint") != host_fingerprint():
+        return None
+    payload["policy_obj"] = policy
+    return payload
+
+
+def resolve_policy() -> DispatchPolicy:
+    """Env override -> cached host profile -> built-in defaults."""
+    env = os.environ.get(PROFILE_ENV)
+    if env is not None:
+        if env.strip().lower() in ("", "default", "none", "0"):
+            return DispatchPolicy()
+        prof = load_profile(env, require_host_match=False)  # explicit pin
+        if prof is None:
+            raise ValueError(
+                f"{PROFILE_ENV}={env!r} does not point at a valid dispatch "
+                "profile (see docs/dispatch.md)"
+            )
+        return prof["policy_obj"]
+    prof = load_profile(profile_path(), require_host_match=True)
+    if prof is not None:
+        return prof["policy_obj"]
+    return DispatchPolicy()
+
+
+# -- the process-wide active policy ----------------------------------------------
+#
+# Module-level consumers that cannot carry an instance policy (the shared
+# jitted-forward trace caches in serve.estimator, the banding cache in
+# core.bucketing, and the chunk fallback in core.gnn) read capacities from
+# here.  Resolved lazily on first use so the env override and host profile
+# apply process-wide; tests scope overrides with ``use_policy``.
+
+_ACTIVE: Optional[DispatchPolicy] = None
+
+
+def active_policy() -> DispatchPolicy:
+    global _ACTIVE
+    if _ACTIVE is None:
+        _ACTIVE = resolve_policy()
+    return _ACTIVE
+
+
+def set_active_policy(policy: Optional[DispatchPolicy]) -> None:
+    """Set (or, with None, re-resolve on next use) the process-wide policy."""
+    global _ACTIVE
+    _ACTIVE = policy.validate() if policy is not None else None
+
+
+@contextlib.contextmanager
+def use_policy(policy: DispatchPolicy):
+    """Scoped ``set_active_policy`` (tests, autotune probes)."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = policy.validate()
+    try:
+        yield policy
+    finally:
+        _ACTIVE = prev
+
+
+# -- autotune ---------------------------------------------------------------------
+
+
+@dataclass
+class AutotuneResult:
+    policy: DispatchPolicy
+    measurements: Dict[str, object]
+    reused_cached: bool  # True: a valid profile existed, no probe ran
+    path: Optional[Path] = None
+
+
+def _probe_estimator(hidden: int = 24, n_ensemble: int = 2, seed: int = 0):
+    """A tiny randomly-initialized estimator: dispatch crossovers depend on
+    shapes and launch counts, never on trained weights."""
+    import jax
+
+    from repro.core.model import CostModelConfig, init_cost_model
+    from repro.core.gnn import GNNConfig
+    from repro.serve.estimator import CostEstimator
+
+    models = {}
+    for i, metric in enumerate(("latency_p", "success")):
+        cfg = CostModelConfig(
+            metric=metric, n_ensemble=n_ensemble, gnn=GNNConfig(hidden=hidden)
+        )
+        models[metric] = (init_cost_model(jax.random.PRNGKey(seed + i), cfg), cfg)
+    return CostEstimator(models, policy=DispatchPolicy())
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _probe_structures(n: int, seed: int) -> List[Tuple]:
+    from repro.dsps.generator import WorkloadGenerator
+
+    gen = WorkloadGenerator(seed=seed)
+    kinds = ("linear", "two_way", "three_way")
+    return [
+        (gen.query(kind=kinds[i % len(kinds)], name=f"tune{i}"), gen.cluster(3 + i % 4))
+        for i in range(n)
+    ]
+
+
+def _measure_cross_query_crossover(
+    est, probes: Tuple[int, ...], repeats: int, seed: int
+) -> Tuple[Optional[int], Dict]:
+    """Largest probed rows-per-structure where the merged drain still beats
+    the per-structure drain.  Always within the probed band — autotune
+    interpolates between measurements, it never extrapolates past them."""
+    import numpy as np
+
+    from repro.placement import sample_assignment_matrix
+
+    structures = _probe_structures(4, seed)
+    metrics = tuple(est.models)
+    rng = np.random.default_rng(seed)
+    band: Dict[str, Dict[str, float]] = {}
+    crossover = None
+    for rows in probes:
+        items = [
+            (q, c, sample_assignment_matrix(q, c, rows, rng, max_tries_factor=400))
+            for q, c in structures
+        ]
+        items = [(q, c, a) for q, c, a in items if len(a)]
+        if len(items) < 2:
+            continue
+
+        def merged():
+            est.score_many(items, metrics)
+
+        def per_structure():
+            for q, c, a in items:
+                est.score(q, c, a, metrics)
+
+        merged(), per_structure()  # warm both paths' traces outside the clock
+        t_merged = _best_of(merged, repeats)
+        t_per = _best_of(per_structure, repeats)
+        band[str(rows)] = {"merged_s": t_merged, "per_structure_s": t_per}
+        if t_merged < t_per:
+            crossover = rows
+    return crossover, band
+
+
+def _measure_chunk_width(
+    est, probes: Tuple[int, ...], batch: int, repeats: int, seed: int
+) -> Tuple[Optional[int], Dict]:
+    """Fastest placed-path panel width for a ``batch``-candidate scoring call."""
+    import numpy as np
+
+    from repro.placement import sample_assignment_matrix
+
+    (q, c), = _probe_structures(1, seed + 101)
+    rng = np.random.default_rng(seed)
+    pool = sample_assignment_matrix(q, c, batch, rng, max_tries_factor=400)
+    if not len(pool):
+        return None, {}
+    a = pool[np.arange(batch) % len(pool)]
+    metrics = tuple(est.models)
+    timings: Dict[str, float] = {}
+    best_chunk, best_t = None, float("inf")
+    for chunk in probes:
+        if chunk and batch % chunk:
+            continue  # the panel scan requires an integral panel count
+        probe_est = type(est)(
+            est.models, policy=replace(est.policy, score_chunk=chunk)
+        )
+
+        def run():
+            probe_est.score(q, c, a, metrics)
+
+        run()  # warm this chunk's trace outside the clock
+        t = _best_of(run, repeats)
+        timings[str(chunk)] = t
+        if t < best_t:
+            best_chunk, best_t = chunk, t
+    return best_chunk, timings
+
+
+def autotune(
+    quick: bool = False,
+    budget_s: Optional[float] = None,
+    seed: int = 0,
+    out: Optional[os.PathLike] = None,
+    force: bool = False,
+    base: Optional[DispatchPolicy] = None,
+) -> AutotuneResult:
+    """Measure this host's dispatch crossovers and persist a profile.
+
+    Short seeded probes (deterministic request streams, best-of-repeats
+    timing — the ``serve.load`` calibration methodology) measure
+
+    * the merged-vs-per-structure drain crossover -> ``cross_query_row_limit``
+      (selected within the probed band, never extrapolated);
+    * the placed-path panel width -> ``score_chunk``.
+
+    Everything else keeps ``base`` (default: the built-in defaults) — those
+    knobs are capacity bounds, not crossovers.  The profile is written to
+    ``out`` (default: ``profile_path()``); a second call finding a valid
+    same-host profile at that path is a NO-OP (``reused_cached=True``, no
+    probe runs) unless ``force``.  ``budget_s`` is a wall-clock bound: when
+    it expires mid-run, un-probed knobs keep their defaults and the profile
+    records ``budget_exhausted``.
+    """
+    target = Path(out).expanduser() if out is not None else profile_path()
+    if not force:
+        cached = load_profile(target, require_host_match=True)
+        if cached is not None:
+            return AutotuneResult(
+                policy=cached["policy_obj"],
+                measurements=cached.get("measurements", {}),
+                reused_cached=True,
+                path=target,
+            )
+    base = (base or DispatchPolicy()).validate()
+    t_start = time.perf_counter()
+
+    def budget_left() -> bool:
+        return budget_s is None or (time.perf_counter() - t_start) < budget_s
+
+    repeats = 3 if quick else 5
+    row_probes = (1, 4, 16) if quick else (1, 2, 4, 8, 16, 32)
+    chunk_batch = 256 if quick else 512
+    chunk_probes = (64, 256) if quick else (64, 128, 256, 512)
+
+    measurements: Dict[str, object] = {
+        "quick": quick,
+        "seed": seed,
+        "row_probes": list(row_probes),
+        "chunk_probes": list(chunk_probes),
+        "chunk_batch": chunk_batch,
+    }
+    policy = base
+    # probes run under the BASE policy so the estimator's own dispatch is the
+    # documented default configuration while it is being measured
+    with use_policy(base):
+        est = _probe_estimator(seed=seed)
+        if budget_left():
+            crossover, band = _measure_cross_query_crossover(
+                est, row_probes, repeats, seed
+            )
+            measurements["cross_query_band"] = band
+            if crossover is not None:
+                # merged never winning picks the smallest probe (merge only
+                # trivially small drains); winning everywhere picks the
+                # largest — the selection stays inside the measured band
+                policy = replace(policy, cross_query_row_limit=crossover)
+                measurements["cross_query_row_limit"] = crossover
+        else:
+            measurements["budget_exhausted"] = "before cross_query probe"
+        if budget_left():
+            chunk, timings = _measure_chunk_width(
+                est, chunk_probes, chunk_batch, repeats, seed
+            )
+            measurements["chunk_timings_s"] = timings
+            if chunk is not None:
+                policy = replace(policy, score_chunk=chunk)
+                measurements["score_chunk"] = chunk
+        else:
+            measurements.setdefault("budget_exhausted", "before chunk probe")
+    measurements["elapsed_s"] = round(time.perf_counter() - t_start, 3)
+    path = save_profile(target, policy.validate(), measurements)
+    return AutotuneResult(
+        policy=policy, measurements=measurements, reused_cached=False, path=path
+    )
+
+
+# -- CLI (scripts/ci.sh) ----------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve.policy", description=__doc__
+    )
+    ap.add_argument("--quick", action="store_true", help="small probe set for CI")
+    ap.add_argument("--budget-s", type=float, default=None, help="wall-clock bound")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None, help="profile path (default: host cache)")
+    ap.add_argument("--force", action="store_true", help="re-probe even if cached")
+    ap.add_argument(
+        "--expect-cached",
+        action="store_true",
+        help="fail unless a valid cached profile made this a no-op (CI gate)",
+    )
+    ap.add_argument(
+        "--validate", type=str, default=None, metavar="PATH",
+        help="validate a profile JSON against the schema and exit",
+    )
+    args = ap.parse_args(argv)
+
+    if args.validate is not None:
+        prof = load_profile(args.validate, require_host_match=False)
+        if prof is None:
+            print(f"INVALID dispatch profile: {args.validate}")
+            return 1
+        print(json.dumps({"valid": True, "policy": prof["policy"]}, indent=2))
+        return 0
+
+    res = autotune(
+        quick=args.quick,
+        budget_s=args.budget_s,
+        seed=args.seed,
+        out=args.out,
+        force=args.force,
+    )
+    print(
+        json.dumps(
+            {
+                "reused_cached": res.reused_cached,
+                "path": str(res.path),
+                "policy": res.policy.to_dict(),
+                "measurements": res.measurements,
+            },
+            indent=2,
+            default=str,
+        )
+    )
+    if args.expect_cached and not res.reused_cached:
+        print("expected a cached profile but a probe ran")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

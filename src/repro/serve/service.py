@@ -70,6 +70,12 @@ import numpy as np
 from repro.core.bucketing import bucket_size
 from repro.core.graph import JointGraph, skeleton_cache_key
 from repro.serve.estimator import CostEstimator
+from repro.serve.policy import DispatchPolicy
+
+# distinguishes "argument not passed" (fall back to the policy) from an
+# explicit None, which several knobs accept with meaning (e.g.
+# cross_query_row_limit=None -> always merge)
+_UNSET = object()
 
 
 class ServiceOverloadError(RuntimeError):
@@ -162,38 +168,57 @@ class PlacementService:
     deterministic drain.  Use as a context manager or call ``close()`` to
     stop the worker; close drains (or fails — never silently drops) every
     accepted request.
+
+    Every dispatch default (``max_batch``, ``cross_query_row_limit``,
+    ``double_buffer``, ``warmup_cands``, ``max_merged_mixes``) comes from the
+    service's ``DispatchPolicy`` — ``policy=`` if given, else the estimator's
+    resolved policy (host profile / ``REPRO_DISPATCH_PROFILE`` / defaults;
+    see serve/policy.py).  An explicit constructor argument always wins over
+    the policy, including explicit ``None`` where that is meaningful
+    (``cross_query_row_limit=None`` means *always merge*).
     """
 
     def __init__(
         self,
         estimator: CostEstimator,
-        max_batch: int = 1024,
+        max_batch: Optional[int] = None,
         auto_start: bool = True,
         cross_query: bool = True,
-        cross_query_row_limit: Optional[int] = 16,
+        cross_query_row_limit=_UNSET,
         max_queue_depth: Optional[int] = None,
         overflow: str = "reject",
-        double_buffer: Optional[bool] = None,
+        double_buffer=_UNSET,
         warmup: Optional[Sequence[Tuple]] = None,
-        warmup_cands: int = 8,
-        max_merged_mixes: Optional[int] = 32,
+        warmup_cands: Optional[int] = None,
+        max_merged_mixes=_UNSET,
+        policy: Optional[DispatchPolicy] = None,
     ):
         if overflow not in ("reject", "block"):
             raise ValueError(f"overflow must be 'reject' or 'block', got {overflow!r}")
         self.estimator = estimator
-        self.max_batch = int(max_batch)
+        self.policy = (policy if policy is not None else estimator.policy).validate()
+        self.max_batch = int(max_batch if max_batch is not None else self.policy.max_batch)
         self.cross_query = bool(cross_query)
-        self.cross_query_row_limit = cross_query_row_limit
+        self.cross_query_row_limit = (
+            self.policy.cross_query_row_limit
+            if cross_query_row_limit is _UNSET
+            else cross_query_row_limit
+        )
         self.max_queue_depth = max_queue_depth
         self.overflow = overflow
-        if double_buffer is None:
+        if double_buffer is _UNSET or double_buffer is None:
             # launch-ahead only pays where device compute runs beside the
             # host; on CPU they share cores, so the split just fragments
-            # drains (an extra dispatch per burst, measured in serve_bench)
-            double_buffer = jax.default_backend() != "cpu"
+            # drains (an extra dispatch per burst, measured in serve_bench);
+            # the policy's tri-state None applies the same backend-auto rule
+            double_buffer = self.policy.resolved_double_buffer()
         self.double_buffer = bool(double_buffer)
-        self.warmup_cands = int(warmup_cands)
-        self.max_merged_mixes = max_merged_mixes
+        self.warmup_cands = int(
+            warmup_cands if warmup_cands is not None else self.policy.warmup_cands
+        )
+        self.max_merged_mixes = (
+            self.policy.max_merged_mixes if max_merged_mixes is _UNSET else max_merged_mixes
+        )
         self.stats = ServiceStats()
         self._warmup = list(warmup) if warmup else []
         self._warmed = False

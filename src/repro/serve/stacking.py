@@ -1,0 +1,94 @@
+"""Fused multi-metric ensembles + inference voting (serving-side numerics).
+
+The per-metric GNNs share one architecture (paper SIV-A: same GNNConfig,
+different training targets), so their ensemble params are shape-identical
+pytrees with a leading (E,) member axis.  Stacking them along that axis
+turns "one forward per (metric, member)" into ONE vmapped forward whose
+leading axis is sum(E_m) — a single kernel launch per GNN stage instead of
+len(metrics) * E launches, which is where placement scoring spends its time
+(dispatch overhead dominates these small graphs).
+
+These helpers lived in ``core/model.py`` until repro 0.7; they are
+serving-flavored (stacking and voting happen at inference, never in a
+training step), so the core/model retirement moved them here next to their
+only consumer, the ``CostEstimator`` facade.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import CostModelConfig
+
+
+def _ensemble_vote(raw: np.ndarray, cfg: CostModelConfig) -> np.ndarray:
+    """(E, B) raw outputs -> cost-space prediction (paper SIV-A).
+
+    regression: mean over members of expm1(raw); classification: majority vote
+    over thresholded member probabilities -> {0,1}.
+    """
+    if cfg.task == "regression":
+        return np.mean(np.expm1(raw), axis=0).clip(min=0.0)
+    votes = (raw > 0.0).astype(np.int64)  # logit > 0 <=> p > 0.5
+    return (votes.sum(axis=0) * 2 > votes.shape[0]).astype(np.int64)
+
+
+class StackedEnsembles(NamedTuple):
+    """Per-metric ensembles fused along the leading member axis.
+
+    ``params`` leaves have shape ``(sum of member counts, ...)``; metric ``m``
+    owns rows ``[offsets[i], offsets[i] + sizes[i])``.  Hashable-free (holds
+    arrays), so it is passed positionally into jitted forwards that are cached
+    on the shared ``GNNConfig`` instead.
+    """
+
+    params: object  # pytree, leaves stacked along axis 0
+    metrics: Tuple[str, ...]
+    cfgs: Tuple[CostModelConfig, ...]
+    sizes: Tuple[int, ...]  # members per metric, in ``metrics`` order
+
+
+def stack_metric_models(
+    models: Dict[str, Tuple[object, CostModelConfig]],
+    metrics: Optional[Sequence[str]] = None,
+) -> StackedEnsembles:
+    """Fuse several per-metric (params, cfg) ensembles into one stack.
+
+    Requires every model to share the same ``GNNConfig`` and ``traditional_mp``
+    flag (the forwards must be structurally identical to share a trace);
+    raises ``ValueError`` otherwise so callers can fall back to the per-metric
+    loop explicitly.  Member counts may differ — leaves are concatenated, not
+    stacked, so metric i contributes ``sizes[i]`` rows.
+    """
+    names = tuple(metrics) if metrics is not None else tuple(models)
+    assert names, "no metrics to stack"
+    cfgs = tuple(models[m][1] for m in names)
+    for c in cfgs[1:]:
+        if c.gnn != cfgs[0].gnn or c.traditional_mp != cfgs[0].traditional_mp:
+            raise ValueError(
+                "cannot fuse metric ensembles with differing GNN configs: "
+                f"{cfgs[0].metric}={cfgs[0].gnn} vs {c.metric}={c.gnn} "
+                f"(traditional_mp {cfgs[0].traditional_mp} vs {c.traditional_mp})"
+            )
+    sizes = []
+    for m in names:
+        leaf = jax.tree_util.tree_leaves(models[m][0])[0]
+        sizes.append(int(leaf.shape[0]))
+    stacked = jax.tree_util.tree_map(
+        lambda *leaves: jnp.concatenate([jnp.asarray(l) for l in leaves], axis=0),
+        *[models[m][0] for m in names],
+    )
+    return StackedEnsembles(stacked, names, cfgs, tuple(sizes))
+
+
+def _split_votes(raw: np.ndarray, stacked: StackedEnsembles) -> Dict[str, np.ndarray]:
+    """(sum_E, B) fused raw outputs -> per-metric cost-space predictions."""
+    out, off = {}, 0
+    for m, cfg, sz in zip(stacked.metrics, stacked.cfgs, stacked.sizes):
+        out[m] = _ensemble_vote(raw[off : off + sz], cfg)
+        off += sz
+    return out

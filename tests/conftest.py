@@ -4,6 +4,12 @@ import os
 # forces 512 host devices in its own subprocess.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Routing assertions (merged-vs-per-structure drains, chunk widths) pin the
+# built-in DispatchPolicy defaults; a developer machine's autotuned profile
+# in ~/.cache/repro/dispatch must not flip them (tests that exercise profile
+# resolution set this themselves via monkeypatch).
+os.environ.setdefault("REPRO_DISPATCH_PROFILE", "default")
+
 import numpy as np
 import pytest
 

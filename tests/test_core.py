@@ -23,11 +23,11 @@ from repro.core import (
     init_cost_model,
     init_gnn,
     msle_loss,
-    predict,
     qerror,
     qerror_summary,
 )
 from repro.core.graph import SLOT_RANGES
+from repro.serve.estimator import ensemble_predict
 from repro.dsps import WorkloadGenerator
 
 GEN = WorkloadGenerator(seed=5)
@@ -138,7 +138,7 @@ def test_classification_majority_vote():
     gb = jax.tree_util.tree_map(jnp.asarray, batch_graphs([g, g, g]))
     cfg = CostModelConfig(metric="success", n_ensemble=3, gnn=GNNConfig(hidden=16))
     params = init_cost_model(jax.random.PRNGKey(4), cfg)
-    out = predict(params, gb, cfg)
+    out = ensemble_predict(params, gb, cfg)
     assert set(np.unique(out)).issubset({0, 1})
 
 

@@ -15,13 +15,13 @@ from repro.core.graph import (
     query_static,
     skeleton_cache_key,
 )
-from repro.core.model import (
-    predict,
-    predict_metrics,
-    predict_placements,
-    predict_placements_fused,
-    stack_metric_models,
+from repro.serve.estimator import (
+    CostEstimator,
+    ensemble_predict,
+    placed_predict,
+    placed_predict_fused,
 )
+from repro.serve.stacking import stack_metric_models
 from repro.dsps import WorkloadGenerator, simulate
 from repro.dsps.placement import (
     Placement,
@@ -155,7 +155,7 @@ def test_batched_scorer_matches_per_candidate_predict():
     for metric in fast:
         params, cfg = opt.models[metric]
         singles = batch_graphs([build_graph(q, c, Placement.of(row)) for row in a])
-        ref = predict(params, jax.tree_util.tree_map(jnp.asarray, singles), cfg)
+        ref = ensemble_predict(params, jax.tree_util.tree_map(jnp.asarray, singles), cfg)
         np.testing.assert_allclose(fast[metric], ref, rtol=1e-5, atol=1e-6, err_msg=metric)
 
 
@@ -225,9 +225,9 @@ def test_stacked_path_pallas_matches_jnp(lowering, monkeypatch):
     np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p), atol=1e-4, rtol=1e-4)
 
 
-def test_predict_placements_pallas_parity():
-    """The full predict path (jit + ensemble vmap + vote) agrees between the
-    Pallas-routed and jnp scorers on every metric type."""
+def test_placed_predict_pallas_parity():
+    """The full placed-predict path (jit + ensemble vmap + vote) agrees
+    between the Pallas-routed and jnp scorers on every metric type."""
     _, _, _, skel, static, a_place = _placed_inputs(seed=8)
     for metric in ("latency_p", "success"):
         cfg_j = CostModelConfig(metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=16))
@@ -235,8 +235,8 @@ def test_predict_placements_pallas_parity():
             metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=16, use_pallas=True)
         )
         params = init_cost_model(jax.random.PRNGKey(0), cfg_j)
-        ref = predict_placements(params, skel, a_place, static, cfg_j)
-        got = predict_placements(params, skel, a_place, static, cfg_p)
+        ref = placed_predict(params, skel, a_place, static, cfg_j)
+        got = placed_predict(params, skel, a_place, static, cfg_p)
         if metric == "success":  # classification: votes must match exactly
             np.testing.assert_array_equal(got, ref, err_msg=metric)
         else:
@@ -245,23 +245,23 @@ def test_predict_placements_pallas_parity():
 
 def test_stacked_ensembles_match_per_metric_loop():
     """One fused stacked forward == the per-(metric, member) loop, to float
-    tolerance, for both the placed path and the generic predict_metrics path."""
+    tolerance, for both the placed path and the generic estimate path."""
     q, c, a, skel, static, a_place = _placed_inputs(seed=9)
     models = _tiny_models()
     stacked = stack_metric_models(models)
     assert stacked.sizes == (2, 2, 2)
-    fused = predict_placements_fused(stacked, skel, a_place, static)
+    fused = placed_predict_fused(stacked, skel, a_place, static)
     for metric, (params, cfg) in models.items():
-        ref = predict_placements(params, skel, a_place, static, cfg)
+        ref = placed_predict(params, skel, a_place, static, cfg)
         np.testing.assert_allclose(fused[metric], ref, rtol=1e-5, atol=1e-6, err_msg=metric)
-    # generic path: predict_metrics (fused internally) vs per-metric predict
+    # generic path: estimate (fused internally) vs per-metric ensemble_predict
     g = jax.tree_util.tree_map(
         jnp.asarray, batch_graphs([build_graph(q, c, Placement.of(r)) for r in a])
     )
-    scored = predict_metrics(models, g)
+    scored = CostEstimator(models).estimate(g)
     for metric, (params, cfg) in models.items():
         np.testing.assert_allclose(
-            scored[metric], predict(params, g, cfg), rtol=1e-5, atol=1e-6, err_msg=metric
+            scored[metric], ensemble_predict(params, g, cfg), rtol=1e-5, atol=1e-6, err_msg=metric
         )
 
 
@@ -280,7 +280,7 @@ def test_stack_metric_models_rejects_mixed_configs():
     for metric in ("latency_p", "latency_e"):
         params, cfg = opt.models[metric]
         skel = jax.tree_util.tree_map(jnp.asarray, build_graph_skeleton(q, c))
-        ref = predict_placements(
+        ref = placed_predict(
             params, skel, jnp.asarray(build_a_place_batch(q, c, a)), query_static(q), cfg
         )[: len(a)]
         np.testing.assert_allclose(got[metric], ref, rtol=1e-5, atol=1e-6, err_msg=metric)

@@ -374,49 +374,49 @@ def test_from_bundle_warns_on_corpus_fingerprint_mismatch():
         CostEstimator.from_bundle(bundle, corpus_fingerprint=corpus_fingerprint(traces[:5]))
 
 
-# -- deprecation shims ----------------------------------------------------------
+# -- 0.7 shim removal ------------------------------------------------------------
 
 
-def test_shims_warn_once_and_match_facade():
-    """Every predict_* shim fires DeprecationWarning exactly once per process
-    and returns exactly what the facade returns."""
+def test_predict_shims_removed_in_0_7():
+    """The deprecated ``core.model.predict_*`` surface is GONE at 0.7 (the
+    removal horizon pinned in docs/api.md): no shim symbols, no deprecation
+    machinery, and the numeric core neither imports ``warnings`` nor mentions
+    ``DeprecationWarning``.  The facade is the one inference surface."""
+    import inspect
+
+    import repro
     from repro.core import model as model_mod
 
+    assert repro.__version__.split(".")[:2] == ["0", "7"]
+    for name in (
+        "predict",
+        "predict_proba",
+        "predict_metrics",
+        "predict_placements",
+        "predict_placements_fused",
+        "_DEPRECATION_WARNED",
+        "_warn_deprecated",
+    ):
+        assert not hasattr(model_mod, name), f"core.model.{name} must be removed"
+        assert not hasattr(repro.core, name), f"repro.core.{name} must be removed"
+    src = inspect.getsource(model_mod)
+    assert "DeprecationWarning" not in src
+    assert "import warnings" not in src
+    # the facade still answers everything the shims used to
     models = _models(metrics=("latency_p", "success"))
     est = CostEstimator(models)
     _, g = _graphs(n=6, seed=13)
-    params, cfg = models["latency_p"]
-
-    model_mod._DEPRECATION_WARNED.clear()
-    with pytest.warns(DeprecationWarning, match="predict is deprecated"):
-        shim = model_mod.predict(params, g, cfg)
-    np.testing.assert_array_equal(shim, est.estimate(g, ["latency_p"])["latency_p"])
-
-    with pytest.warns(DeprecationWarning, match="predict_metrics"):
-        shim_all = model_mod.predict_metrics(models, g)
-    facade_all = est.estimate(g)
-    for m in models:
-        np.testing.assert_array_equal(shim_all[m], facade_all[m], err_msg=m)
-
-    sparams, scfg = models["success"]
-    with pytest.warns(DeprecationWarning, match="predict_proba"):
-        shim_proba = model_mod.predict_proba(sparams, g, scfg)
-    np.testing.assert_array_equal(shim_proba, est.proba(g, "success"))
-    # proba must be the mean of per-member sigmoids (not 1/mean(1+e^-x))
+    out = est.estimate(g)
+    assert set(out) == {"latency_p", "success"}
+    # proba is the mean of per-member sigmoids (not 1/mean(1+e^-x))
     from repro.kernels import active_lowering
     from repro.serve.estimator import _jitted_forward
 
+    sparams, scfg = models["success"]
     raw = np.asarray(_jitted_forward(scfg, active_lowering())(sparams, g))
     np.testing.assert_allclose(
-        shim_proba, (1.0 / (1.0 + np.exp(-raw))).mean(axis=0), rtol=1e-6
+        est.proba(g, "success"), (1.0 / (1.0 + np.exp(-raw))).mean(axis=0), rtol=1e-6
     )
-
-    # second calls: no new warning (once per process per entry point)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        model_mod.predict(params, g, cfg)
-        model_mod.predict_metrics(models, g)
-        model_mod.predict_proba(sparams, g, scfg)
 
 
 # -- service --------------------------------------------------------------------

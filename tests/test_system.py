@@ -11,9 +11,9 @@ from repro.core import (
     CostModelConfig,
     GNNConfig,
     init_cost_model,
-    predict,
     qerror_summary,
 )
+from repro.serve.estimator import ensemble_predict
 from repro.dsps import WorkloadGenerator, simulate
 from repro.placement import PlacementOptimizer, heuristic_placement
 from repro.training import TrainConfig, dataset_from_traces, split_dataset, train_cost_model
@@ -42,9 +42,9 @@ def test_trained_beats_untrained(trained):
     params, cfg = models["latency_p"]
     te = tests["latency_p"]
     g = jax.tree_util.tree_map(jnp.asarray, te.graphs)
-    trained_q = qerror_summary(te.labels, predict(params, g, cfg))["q50"]
+    trained_q = qerror_summary(te.labels, ensemble_predict(params, g, cfg))["q50"]
     untrained = init_cost_model(jax.random.PRNGKey(9), cfg)
-    untrained_q = qerror_summary(te.labels, predict(untrained, g, cfg))["q50"]
+    untrained_q = qerror_summary(te.labels, ensemble_predict(untrained, g, cfg))["q50"]
     assert trained_q < untrained_q * 0.5, (trained_q, untrained_q)
     assert trained_q < 5.0  # small corpus, loose bound
 
