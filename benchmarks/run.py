@@ -20,8 +20,8 @@ def main() -> None:
     only = args.only.split(",") if args.only != "all" else None
 
     from benchmarks import exp1_accuracy, exp2_placement, exp3456, exp7_ablations
-    from benchmarks import kernels_bench, load_harness, placement_bench, roofline_report
-    from benchmarks import serve_bench, training_bench
+    from benchmarks import kernel_bench, kernels_bench, load_harness, placement_bench
+    from benchmarks import roofline_report, serve_bench, training_bench
 
     stages = {
         "exp1": exp1_accuracy.main,
@@ -36,6 +36,7 @@ def main() -> None:
         "exp6": exp3456.exp6_unseen_benchmarks,
         "exp7": exp7_ablations.main,
         "kernels": kernels_bench.main,
+        "kernel_sweep": lambda: kernel_bench.main(["--quick"]),
         "roofline": lambda: (roofline_report.main("single"), roofline_report.main("multi")),
     }
     timings = []

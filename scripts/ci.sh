@@ -9,6 +9,12 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 echo "== tier-1 tests =="
 python -m pytest -x -q
 
+echo "== kernel parity (forced Pallas interpreter) =="
+# the interpret lowering executes the actual kernel bodies off-TPU; run the
+# kernel parity suites under it explicitly so the lane is pinned even if the
+# autouse fixtures ever change
+REPRO_PALLAS_INTERPRET=1 python -m pytest -q tests/test_kernels.py tests/test_sweep_kernels.py
+
 echo "== dispatch autotune (quick) =="
 # the host-calibration path must work end to end on this container: a quick
 # autotune under a wall-clock budget emits a profile that validates, and a
@@ -22,6 +28,14 @@ python -m repro.serve.policy --quick --budget-s 120 --out "$DISPATCH_PROFILE_OUT
 # built-in DispatchPolicy defaults; pin them so a tuned profile in this
 # host's ~/.cache/repro/dispatch can never skew a gated ratio
 export REPRO_DISPATCH_PROFILE=default
+
+echo "== fused sweep kernel perf (quick) =="
+# ONE stage-3 launch per fused forward (counter-asserted inside) and the
+# fused sweep must amortize >= 1.2x over per-level launches on the interpret
+# lowering; the kernel-routed merged engine must cost nothing on the jnp
+# serving lowering (regression-gated vs the recorded baseline)
+python benchmarks/kernel_bench.py --quick --min-fused-ratio 1.2 \
+  --baseline benchmarks/baselines/kernel_bench_quick.json --max-regression 0.10
 
 echo "== placement scoring perf (quick) =="
 # the fast path must build each candidate graph exactly once (asserted inside),

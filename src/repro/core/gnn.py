@@ -18,16 +18,21 @@ the stage-3 data-flow sweep runs —
 
 * ``scan``   — a ``lax.scan`` over all ``max_depth`` levels with dynamic
   depth-select (the generic fallback for arbitrary batches);
-* ``banded`` — one statically-banded step per non-empty depth level of a
-  bucket (``graph.BatchBanding``): row_span + parent_rows bounds skip the
-  provably-unselected rows' dense work.  This is the training path;
+* ``sweep``  — the banded plan FUSED: all non-empty depth levels of a
+  bucket (``graph.BatchBanding``) run as ONE ``kernels/mp_sweep`` call with
+  the banding table baked in as compile-time constants.  This is the
+  training/serving path whenever a banding is present and the update bank
+  is 2-layer (kernel-fusable);
+* ``banded`` — the unfused fallback of ``sweep``: one statically-banded
+  ``mp_update`` step per level (kept for >2-layer, jnp-only update banks);
 * ``exact``  — the placement-specialized sweep unrolled over one query's
   ``QueryStatic.updates`` (only the slots that carry an operator at each
   level are recomputed).
 
 ``GNNConfig.use_pallas`` routes every plan kind through ``kernels/banked_mlp``
-(stages 0-2) and ``kernels/mp_update`` (stage 3); configs the kernels cannot
-fuse raise loudly instead of silently falling back.
+(stages 0-2) and ``kernels/mp_sweep`` / ``kernels/mp_update`` (stage 3), and
+the cross-query merged engine through ``kernels/seg_gather``; configs the
+kernels cannot fuse raise loudly instead of silently falling back.
 
 ``apply_gnn_traditional`` is the Exp-7b ablation: K rounds of symmetric
 neighbor aggregation with shared (non-type-specific ordering) updates.
@@ -40,6 +45,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import nn
 from repro.core.features import HW_FEATURE_DIM, N_OP_TYPES, OP_FEATURE_DIM
@@ -135,6 +141,10 @@ class StagePlan(NamedTuple):
     ``kind``:
       * ``"scan"``   — ``lax.scan`` over depths ``1..depth_max``, full row
         width, dynamic depth-select (generic batches without banding);
+      * ``"sweep"``  — ALL of ``levels`` in one fused ``kernels/mp_sweep``
+        call (the banding table as compile-time constants; one stage-3
+        launch per forward on the kernel path).  Chosen over ``banded``
+        whenever the update bank is 2-layer;
       * ``"banded"`` — unrolled over ``levels``; each level runs at its static
         ``row_span`` with a static ``parent_rows`` contraction bound
         (bucketed training batches, ``graph.batch_banding``);
@@ -162,13 +172,18 @@ def _clip_ranges(ranges, start: int, stop: int):
     return tuple(out)
 
 
-def _banded_plan(banding: BatchBanding, ranges=SLOT_RANGES) -> StagePlan:
+def _banded_plan(banding: BatchBanding, ranges=SLOT_RANGES, kind: str = "banded") -> StagePlan:
     return StagePlan(
-        "banded",
+        kind,
         levels=tuple(
             (d, span, _clip_ranges(ranges, *span), p) for d, span, p in banding.levels
         ),
     )
+
+
+def _sweep_fusable(params: nn.Params) -> bool:
+    """The fused sweep (and its oracle twin) handle exactly 2-layer banks."""
+    return len(params["op_upd"]["layers"]) == 2
 
 
 def _bank_member(p: nn.Params, t: int) -> nn.Params:
@@ -185,6 +200,31 @@ def _dataflow_sweep(
     ``(B, N, .)`` batched); the ``exact`` jnp branch is the one exception —
     it indexes candidate batches explicitly (the placed path's layout).
     """
+    if plan.kind == "sweep":
+        mask_vec = (
+            op_mask[..., 0] if op_mask is not None else jnp.ones(h.shape[:-1], jnp.float32)
+        )
+        if cfg.use_pallas:
+            # the whole banding table in ONE kernel launch (vs one per level)
+            from repro.kernels.mp_sweep import ops as sweep_ops
+
+            _require_fusable(params["op_upd"], "op_upd (stage-3 mp_sweep)")
+            return sweep_ops.mp_sweep(
+                params["op_upd"], h, a_flow, op_depth, mask_vec, plan.levels
+            )
+        # jnp path: the sweep oracle IS the old per-level banded loop, with
+        # the same injected banked apply — bitwise-identical numerics
+        from repro.kernels.mp_sweep.ref import mp_sweep_ref
+
+        return mp_sweep_ref(
+            params["op_upd"],
+            h,
+            a_flow,
+            op_depth,
+            mask_vec,
+            plan.levels,
+            apply_fn=nn.apply_mlp_bank_slotted,
+        )
     if cfg.use_pallas:
         from repro.kernels.mp_update import ops as mp_ops
 
@@ -361,13 +401,16 @@ def apply_gnn_batch(
     the same code — banked MLPs execute ONCE across the whole padded batch
     (one launch per stage), not per-graph under vmap.  ``banding`` (from
     ``bucketing.batch_banding`` / ``exact_banding``, static per bucket or
-    per signature set) replaces the full ``max_depth`` stage-3 scan with one
-    banded step per non-empty depth level; a banding carrying a row trim
+    per signature set) replaces the full ``max_depth`` stage-3 scan with the
+    FUSED depth sweep over its non-empty levels (``StagePlan("sweep")``: one
+    ``kernels/mp_sweep`` call for the whole table; >2-layer update banks fall
+    back to the per-level ``banded`` loop); a banding carrying a row trim
     additionally gathers the batch onto its all-graphs-active row subset and
     runs EVERY stage there (``banding.ranges`` are that layout's type runs).
     Without a banding the sweep falls back to the seed-equivalent full scan.
     ``cfg.use_pallas`` routes stages 0-2 through ``kernels/banked_mlp`` and
-    stage 3 through ``kernels/mp_update`` (see module docstring).
+    stage 3 through ``kernels/mp_sweep``/``kernels/mp_update`` (see module
+    docstring).
     """
     ranges = SLOT_RANGES
     if banding is not None and banding.rows is not None:
@@ -380,7 +423,9 @@ def apply_gnn_batch(
     plan = (
         StagePlan("scan", depth_max=cfg.max_depth)
         if banding is None
-        else _banded_plan(banding, ranges)
+        else _banded_plan(
+            banding, ranges, kind="sweep" if _sweep_fusable(params) else "banded"
+        )
     )
     return _stages123(
         params,
@@ -424,6 +469,29 @@ def apply_gnn_stacked(
     return jax.vmap(lambda p: apply_gnn_batch(p, g, cfg, banding))(params)[..., 0]
 
 
+def validate_merged_parents(a_flow, max_parents: int, what: str = "skeleton stack") -> None:
+    """Raise when any row's data-flow in-degree exceeds ``max_parents``.
+
+    The merged engine's parent tables keep only the top ``max_parents``
+    entries of each ``a_flow`` column (``argsort(-flow_in)[..., :P]``): a row
+    with more parents would have them silently dropped and the stage-3 sums
+    would be WRONG, not slow.  Host-side (concrete arrays only) — the
+    estimator calls it at merged-group build time, and ``apply_gnn_merged``
+    re-checks eager concrete inputs for direct callers.
+    """
+    indeg = np.asarray(a_flow).sum(axis=-2)
+    worst = int(indeg.max(initial=0))
+    if worst > max_parents:
+        loc = tuple(int(v) for v in np.argwhere(indeg > max_parents)[0])
+        raise ValueError(
+            f"merged cross-query engine: {what} row {loc} has data-flow "
+            f"in-degree {worst} > max_parents={max_parents}; the parent-table "
+            "gather would silently drop parents and return wrong sums. Pass "
+            "max_parents >= the stack's true maximum in-degree "
+            "(a_flow.sum(axis=-2).max(), as serve.estimator derives it)."
+        )
+
+
 def apply_gnn_merged(
     params: nn.Params,
     skels: JointGraph,  # (S, N, .) stacked skeletons (``a_place`` ignored)
@@ -454,13 +522,23 @@ def apply_gnn_merged(
 
     Numerically equal to ``apply_gnn_stacked`` on the expanded broadcast
     batch to float tolerance (same sums, different association — the
-    mixed-stream parity tests pin it).  jnp-only by design: ``use_pallas``
-    configs keep the dense banded path, whose kernels own TPU tiling.
+    mixed-stream parity tests pin it).  The gathers/scatters route through
+    ``kernels/seg_gather`` (one-hot SpMM kernels on TPU, the very same
+    take_along_axis / scatter-add formulations on the jnp ref lowering), so
+    ``use_pallas`` configs are served by this engine too — the banked MLPs
+    then run through ``kernels/banked_mlp`` like every other path.
     ``banding`` must come from ``bucketing.exact_banding_cached`` over
     ``skels`` (signature sets are padding-invariant, so it also covers every
     chunk of the batch).  Returns ``(members, B)`` raw outputs.
     """
-    assert not cfg.use_pallas, "merged path is the jnp CPU fast path"
+    from repro.kernels.seg_gather import ops as seg_ops
+
+    try:
+        flow_host = np.asarray(skels.a_flow)  # concrete (eager) inputs only
+    except Exception:  # traced under jit: the estimator validated at group build
+        flow_host = None
+    if flow_host is not None:
+        validate_merged_parents(flow_host, max_parents)
     ranges = SLOT_RANGES
     if banding.rows is not None:
         skels = _trim_rows(skels, banding.rows)
@@ -475,14 +553,13 @@ def apply_gnn_merged(
     pidx = jnp.argsort(-flow_in, axis=-1)[..., :max_parents]  # (S, N, P)
     pmask = jnp.take_along_axis(flow_in, pidx, axis=-1)  # (S, N, P) in {0,1}
     row_pidx = pidx[skel_id]  # (B, N, P)
-    row_pmask = pmask[skel_id][..., None]  # (B, N, P, 1)
+    row_pmask = pmask[skel_id]  # (B, N, P)
     host = jnp.argmax(a_place, axis=-1)  # (B, N)
     placed = jnp.max(a_place, axis=-1)[..., None]  # (B, N, 1): 0 for padded rows
     op_mask_s = skels.op_mask[..., None]  # (S, N, 1)
     hw_mask_b = skels.hw_mask[skel_id][..., None]  # (B, W, 1)
     op_mask_b = op_mask_s[skel_id]  # (B, N, 1)
     depth_b = skels.op_depth[skel_id]  # (B, N)
-    b_rows = a_place.shape[0]
 
     def member_fwd(pp):
         # stage 0 on the S skeletons only, gathered out per candidate row
@@ -492,28 +569,21 @@ def apply_gnn_merged(
         hw0 = h_hw_s[skel_id]  # (B, W, H)
 
         # stage 1: hosts absorb their operators (segment scatter-add per row)
-        def seg_sum(h_row, host_row):
-            return jnp.zeros((n_hw, h_row.shape[-1]), h_row.dtype).at[host_row].add(h_row)
-
-        msg_hw = jax.vmap(seg_sum)(h0 * placed, host)  # (B, W, H)
+        msg_hw = seg_ops.segment_sum(h0 * placed, host, n_hw)  # (B, W, H)
         h_hw = _apply_shared(pp["hw_upd"], jnp.concatenate([hw0, msg_hw], -1), cfg, "hw_upd")
         h_hw = h_hw * hw_mask_b
 
-        # stage 2: operators absorb their single host's state (gather)
-        msg_ops = jnp.take_along_axis(h_hw, host[..., None], axis=-2) * placed
+        # stage 2: operators absorb their single host's state (gather, P=1)
+        msg_ops = seg_ops.gather_sum(h_hw, host[..., None], placed)
         h = _apply_bank(pp["op_upd"], jnp.concatenate([h0, msg_ops], -1), cfg, ranges)
         h = h * op_mask_b
 
         # stage 3: banded levels; parents gathered, never contracted
         for d, (s, e), level_ranges, _ in plan.levels:
-            pi = row_pidx[:, s:e]  # (B, e-s, P)
-            gat = jnp.take_along_axis(
-                h, pi.reshape(b_rows, -1, 1), axis=-2
-            ).reshape(*pi.shape, -1)  # (B, e-s, P, H)
-            msg = (gat * row_pmask[:, s:e]).sum(axis=-2)
+            msg = seg_ops.gather_sum(h, row_pidx[:, s:e], row_pmask[:, s:e])
             z = jnp.concatenate([h[:, s:e], msg], axis=-1)
             shifted = tuple((t, a - s, b - s) for t, a, b in level_ranges)
-            upd = nn.apply_mlp_bank_slotted(pp["op_upd"], z, shifted)
+            upd = _apply_bank(pp["op_upd"], z, cfg, shifted)
             sel = ((depth_b[:, s:e] == d) & (op_mask_b[:, s:e, 0] > 0))[..., None]
             h = h.at[:, s:e].set(jnp.where(sel, upd, h[:, s:e]))
 

@@ -1,14 +1,21 @@
 """Pallas TPU kernels for the perf-critical compute hot-spots.
 
-Three kernels (each: kernel.py = pl.pallas_call + BlockSpec, ops.py = jit'd
-wrapper with custom_vjp, ref.py = pure-jnp oracle):
+Five kernel packages (each: kernel.py = pl.pallas_call + BlockSpec, ops.py =
+jit'd wrapper with custom_vjp, ref.py = pure-jnp oracle):
 
 * ``banked_mlp``  — fused 2-layer node-type-specific MLP over the canonical
   slot layout (COSTREAM encoder / update networks).
 * ``mp_update``   — one stage-3 message-passing depth step fused end-to-end:
   adjacency matmul + concat + banked MLP + depth-select.
+* ``mp_sweep``    — the ENTIRE banded stage-3 depth sweep in one launch: the
+  static banding table as compile-time constants, the hidden-state row tile
+  read once and carried through all levels in VMEM.
+* ``seg_gather``  — segment gather-sum / scatter-add as one-hot SpMM matmuls
+  (the cross-query merged engine's parent-table and host aggregations).
 * ``rglru``       — chunked RG-LRU linear recurrence (RecurrentGemma blocks),
   VMEM-tiled over (batch, channel) with sequential in-kernel time loop.
+
+Shared ops-level helpers (tile arithmetic) live in ``kernels.common``.
 
 Per-backend lowering (``active_lowering``): on TPU the ops run the Pallas
 kernels; on other backends they lower to the jnp oracles (compiled XLA, no

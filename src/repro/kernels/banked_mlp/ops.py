@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.kernels import active_lowering as _lowering
 from repro.kernels.banked_mlp.kernel import banked_mlp_slotted_pallas
 from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
+from repro.kernels.common import largest_tile as _largest_tile
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
@@ -39,13 +40,6 @@ def _banked_mlp(params, x, slot_ranges):
     return banked_mlp_slotted_pallas(
         params, x, slot_ranges, tile_b=tile, interpret=mode == "interpret"
     )
-
-
-def _largest_tile(b: int, cap: int = 128) -> int:
-    for t in range(min(cap, b), 0, -1):
-        if b % t == 0:
-            return t
-    return 1
 
 
 def _fwd(params, x, slot_ranges):

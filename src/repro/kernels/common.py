@@ -1,0 +1,25 @@
+"""Shared helpers for the kernel packages' ops wrappers.
+
+One home for the tile-size arithmetic every ``ops.py`` needs (previously
+three drifting copies in banked_mlp / mp_update / rglru): Pallas grids
+require the tiled axis to divide evenly, so the usable tile is the largest
+divisor of the axis length not exceeding the cap.  Caps come from the active
+``DispatchPolicy`` (``sweep_tile_rows`` / ``seg_gather_tile`` for the new
+kernels) or the package's documented VMEM budget — never fresh inline
+constants.
+"""
+
+from __future__ import annotations
+
+
+def largest_tile(n: int, cap: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (1 when ``n == 0``).
+
+    The Pallas callers tile a batch axis of length ``n`` with a grid of
+    ``n // tile`` programs, so the tile must divide ``n`` exactly; ``cap``
+    bounds the per-program VMEM working set.
+    """
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1

@@ -1,0 +1,11 @@
+"""Fused stage-3 depth sweep: the whole banded data-flow pass in ONE launch.
+
+``mp_update`` runs one depth level per ``pl.pallas_call`` — L launches and L
+full-state HBM round-trips per forward.  ``mp_sweep`` bakes the static
+banding table (per-level depth, ``row_span``, slot ranges, ``parent_rows``)
+into the kernel as compile-time constants and walks every level inside one
+call: the hidden-state row tile is read once, updated in registers/VMEM
+across all levels, and written once.
+"""
+
+from repro.kernels.mp_sweep.ops import mp_sweep  # noqa: F401

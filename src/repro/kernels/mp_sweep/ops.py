@@ -1,0 +1,105 @@
+"""jit'd wrapper for the fused depth-sweep kernel (custom_vjp via oracle).
+
+Per-backend lowering as in ``kernels/mp_update/ops.py``: Pallas kernel on
+TPU, jnp oracle off-TPU (``REPRO_PALLAS_INTERPRET=1`` forces the interpreter
+for parity testing), oracle VJP for the backward everywhere.  The row-tile
+cap comes from the active ``DispatchPolicy.sweep_tile_rows`` (an autotune
+target, not a fresh constant).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import active_lowering as _lowering
+from repro.kernels.common import largest_tile as _largest_tile
+from repro.kernels.mp_sweep.kernel import mp_sweep_pallas
+from repro.kernels.mp_sweep.ref import mp_sweep_ref
+
+
+def _tile_cap() -> int:
+    from repro.serve.policy import active_policy  # lazy: kernels never pull serve at import
+
+    return active_policy().sweep_tile_rows
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _mp_sweep(params, h, a_flow, depth, mask, levels):
+    mode = _lowering()
+    if mode == "ref":
+        # the oracle broadcasts shared (N,N)/(N,) fields itself — keeping
+        # a_flow unbatched lets XLA lower each aggregation as one GEMM
+        return mp_sweep_ref(params, h, a_flow, depth, mask, levels)
+    squeeze = h.ndim == 2
+    if squeeze:
+        h, a_flow, depth, mask = h[None], a_flow[None], depth[None], mask[None]
+    elif h.ndim == 3:  # the Pallas kernel needs every operand batched
+        b = h.shape[0]
+        if a_flow.ndim == 2:
+            a_flow = jnp.broadcast_to(a_flow, (b,) + a_flow.shape)
+        if depth.ndim == 1:
+            depth = jnp.broadcast_to(depth, (b,) + depth.shape)
+        if mask.ndim == 1:
+            mask = jnp.broadcast_to(mask, (b,) + mask.shape)
+    out = mp_sweep_pallas(
+        params,
+        h,
+        a_flow,
+        depth,
+        mask,
+        levels,
+        tile_b=_largest_tile(h.shape[0], _tile_cap()),
+        interpret=mode == "interpret",
+    )
+    return out[0] if squeeze else out
+
+
+def _fwd(params, h, a_flow, depth, mask, levels):
+    return _mp_sweep(params, h, a_flow, depth, mask, levels), (params, h, a_flow, depth, mask)
+
+
+def _bwd(levels, res, g):
+    params, h, a_flow, depth, mask = res
+    _, vjp = jax.vjp(
+        lambda p, hh, aa: mp_sweep_ref(p, hh, aa, depth, mask, levels),
+        params,
+        h,
+        a_flow,
+    )
+    dp, dh, da = vjp(g)
+    return dp, dh, da, None, None
+
+
+_mp_sweep.defvjp(_fwd, _bwd)
+
+
+def mp_sweep(params, h, a_flow, depth, mask, levels):
+    """Fused stage-3 sweep: every banding level in ONE kernel launch.
+
+    ``levels`` is the static banding table — per level ``(d, row_span,
+    slot_ranges, parent_rows)`` exactly as ``gnn.StagePlan`` carries it; it
+    is baked into the kernel as compile-time constants (and into the jit
+    trace key via ``nondiff_argnums``).  ``a_flow``/``depth``/``mask`` may be
+    unbatched while ``h`` is batched, as in ``mp_update`` — the Pallas and
+    interpret lowerings broadcast the shared fields inside the custom_vjp
+    primal so gradients transpose back correctly.
+    """
+    if len(params["layers"]) != 2:  # loud even under python -O (no silent fallback)
+        raise NotImplementedError(
+            f"Pallas mp-sweep kernel fuses exactly two layers, got {len(params['layers'])}"
+        )
+    norm = tuple(
+        (
+            int(d),
+            None if span is None else (int(span[0]), int(span[1])),
+            tuple(slot_ranges),
+            None if parent_rows is None else int(parent_rows),
+        )
+        for d, span, slot_ranges, parent_rows in levels
+    )
+    if not norm:  # a depth-0-only batch has no sweep work at all
+        return h
+    return _mp_sweep(params, h, a_flow, depth, mask, norm)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused stage-3 depth sweep.
+
+The sweep is, by definition, the sequential composition of one
+``mp_update_ref`` step per banding level — this oracle IS that loop, so the
+fused kernel's parity target and the pre-fusion banded engine are the same
+function.  ``apply_fn`` is injected like ``mp_update_ref``'s: the jnp banded
+path passes ``nn.apply_mlp_bank_slotted`` so >2-layer (unfusable) banks keep
+working through the same code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.banked_mlp.ref import banked_mlp_slotted_ref
+from repro.kernels.mp_update.ref import mp_update_ref
+
+
+def mp_sweep_ref(
+    params,
+    h: jax.Array,  # (..., N, H)
+    a_flow: jax.Array,  # (..., N, N)  a_flow[u, v] = 1 iff u -> v
+    depth: jax.Array,  # (..., N) int32
+    mask: jax.Array,  # (..., N) float {0,1}
+    levels,  # ((d, row_span, slot_ranges, parent_rows), ...) static
+    apply_fn=banked_mlp_slotted_ref,
+) -> jax.Array:
+    """Run every banding level's depth step in topological order."""
+    for d, span, slot_ranges, parent_hi in levels:
+        h = mp_update_ref(
+            params,
+            h,
+            a_flow,
+            depth,
+            mask,
+            jnp.asarray(d, depth.dtype),
+            slot_ranges,
+            row_span=span,
+            parent_rows=parent_hi,
+            apply_fn=apply_fn,
+        )
+    return h

@@ -14,15 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import active_lowering as _lowering
+from repro.kernels.common import largest_tile as _largest_tile
 from repro.kernels.mp_update.kernel import mp_update_pallas
 from repro.kernels.mp_update.ref import mp_update_ref
-
-
-def _largest_tile(b: int, cap: int = 128) -> int:
-    for t in range(min(cap, b), 0, -1):
-        if b % t == 0:
-            return t
-    return 1
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))

@@ -12,19 +12,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import largest_tile as _largest_tile
 from repro.kernels.rglru.kernel import linear_scan_pallas
 from repro.kernels.rglru.ref import linear_scan_ref
 
 
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
-
-
-def _largest_tile(n: int, cap: int) -> int:
-    for t in range(min(cap, n), 0, -1):
-        if n % t == 0:
-            return t
-    return 1
 
 
 @jax.custom_vjp

@@ -1,0 +1,11 @@
+"""Segment gather/scatter kernels for the cross-query merged engine.
+
+``apply_gnn_merged`` expresses the graph aggregations as index ops instead
+of dense adjacency matmuls: the stage-3 parent-table gather + masked sum
+(``gather_sum``, which also covers the stage-2 single-host gather) and the
+stage-1 OPS->HW scatter-add (``segment_sum``).  Both are SpMM-shaped — on
+TPU the kernels lower them as one-hot contractions (iota compare feeding the
+MXU), tiled over the candidate axis with power-of-2 row padding.
+"""
+
+from repro.kernels.seg_gather.ops import gather_sum, segment_sum  # noqa: F401

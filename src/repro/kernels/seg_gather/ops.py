@@ -1,0 +1,100 @@
+"""jit'd wrappers for the segment gather/scatter kernels (custom_vjp).
+
+Per-backend lowering as in the other kernel packages: Pallas on TPU, jnp
+oracle off-TPU, ``REPRO_PALLAS_INTERPRET=1`` forces the interpreter.  The
+backward delegates to the oracle's VJP; the integer index operands get
+symbolic-zero (``float0``) cotangents, so the ops are trainable wherever the
+merged engine is differentiated.  Batch-tile caps come from the active
+``DispatchPolicy.seg_gather_tile``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+from jax import dtypes
+
+from repro.kernels import active_lowering as _lowering
+from repro.kernels.common import largest_tile as _largest_tile
+from repro.kernels.seg_gather.kernel import gather_sum_pallas, segment_sum_pallas
+from repro.kernels.seg_gather.ref import gather_sum_ref, segment_sum_ref
+
+
+def _tile_cap() -> int:
+    from repro.serve.policy import active_policy  # lazy: kernels never pull serve at import
+
+    return active_policy().seg_gather_tile
+
+
+def _int_zero(idx):
+    return np.zeros(np.shape(idx), dtypes.float0)
+
+
+@jax.custom_vjp
+def _gather_sum(h, idx, w):
+    mode = _lowering()
+    if mode == "ref":
+        return gather_sum_ref(h, idx, w)
+    return gather_sum_pallas(
+        h, idx, w, tile_b=_largest_tile(h.shape[0], _tile_cap()), interpret=mode == "interpret"
+    )
+
+
+def _gather_fwd(h, idx, w):
+    return _gather_sum(h, idx, w), (h, idx, w)
+
+
+def _gather_bwd(res, g):
+    h, idx, w = res
+    _, vjp = jax.vjp(lambda hh, ww: gather_sum_ref(hh, idx, ww), h, w)
+    dh, dw = vjp(g)
+    return dh, _int_zero(idx), dw
+
+
+_gather_sum.defvjp(_gather_fwd, _gather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _segment_sum(x, seg, n_seg):
+    mode = _lowering()
+    if mode == "ref":
+        return segment_sum_ref(x, seg, n_seg)
+    return segment_sum_pallas(
+        x, seg, n_seg, tile_b=_largest_tile(x.shape[0], _tile_cap()), interpret=mode == "interpret"
+    )
+
+
+def _segment_fwd(x, seg, n_seg):
+    return _segment_sum(x, seg, n_seg), (x, seg)
+
+
+def _segment_bwd(n_seg, res, g):
+    x, seg = res
+    _, vjp = jax.vjp(lambda xx: segment_sum_ref(xx, seg, n_seg), x)
+    (dx,) = vjp(g)
+    return dx, _int_zero(seg)
+
+
+_segment_sum.defvjp(_segment_fwd, _segment_bwd)
+
+
+def gather_sum(h: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """Weighted row gather: ``out[b, r] = sum_p w[b, r, p] * h[b, idx[b, r, p]]``.
+
+    The merged engine's parent-table aggregation (stage 3, ``P = max_parents``
+    with the parent mask as ``w``) and single-host gather (stage 2, ``P = 1``
+    with the placed flag as ``w``).  ``h``: (B, N, H); ``idx``/``w``: (B, R, P).
+    """
+    return _gather_sum(h, idx, w)
+
+
+def segment_sum(x: jax.Array, seg: jax.Array, n_seg: int) -> jax.Array:
+    """Segment scatter-add: ``out[b, s] = sum_{r: seg[b, r] == s} x[b, r]``.
+
+    The merged engine's stage-1 OPS->HW aggregation (``seg`` = each
+    operator's host index; rows must be pre-masked so padded operators
+    contribute zero).  ``x``: (B, N, H); ``seg``: (B, N); out: (B, n_seg, H).
+    """
+    return _segment_sum(x, seg, int(n_seg))

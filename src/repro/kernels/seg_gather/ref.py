@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the segment gather/scatter ops.
+
+These are EXACTLY the index formulations the merged engine inlined before
+the kernels existed (take_along_axis gather; vmapped ``.at[].add`` scatter),
+so routing ``apply_gnn_merged`` through the ops is bitwise-neutral on the
+ref lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_sum_ref(h: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """``out[b, r] = sum_p w[b, r, p] * h[b, idx[b, r, p]]``.
+
+    ``h``: (B, N, H) source states; ``idx``: (B, R, P) int row tables;
+    ``w``: (B, R, P) per-entry weights (the parent masks / placed flags).
+    """
+    b = idx.shape[0]
+    gat = jnp.take_along_axis(h, idx.reshape(b, -1, 1), axis=-2).reshape(
+        *idx.shape, h.shape[-1]
+    )  # (B, R, P, H)
+    return (gat * w[..., None]).sum(axis=-2)
+
+
+def segment_sum_ref(x: jax.Array, seg: jax.Array, n_seg: int) -> jax.Array:
+    """``out[b, s] = sum_{r: seg[b, r] == s} x[b, r]`` for ``s < n_seg``.
+
+    ``x``: (B, N, H) row states (pre-masked: padded rows contribute zero);
+    ``seg``: (B, N) int segment ids in [0, n_seg).
+    """
+
+    def one(xr, sr):
+        return jnp.zeros((n_seg, xr.shape[-1]), xr.dtype).at[sr].add(xr)
+
+    return jax.vmap(one)(x, seg)

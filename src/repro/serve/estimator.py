@@ -45,12 +45,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bucketing import BatchBanding, exact_banding_cached
-from repro.core.gnn import apply_gnn_merged, apply_gnn_placed, apply_gnn_placed_stacked
+from repro.core.gnn import (
+    apply_gnn_merged,
+    apply_gnn_placed,
+    apply_gnn_placed_stacked,
+    validate_merged_parents,
+)
 from repro.core.graph import (
     JointGraph,
     QueryStatic,
     batch_graphs,
-    broadcast_skeleton,
     bucket_size,
     build_a_place_batch,
     build_graph,
@@ -112,6 +116,18 @@ def _policy_lru(fn):
     return wrapper
 
 
+def _can_donate() -> bool:
+    """Whether input-buffer donation pays on this backend.
+
+    XLA:CPU cannot alias donated inputs to outputs — donation there only
+    produces "donated buffer was not usable" warnings — so the deferred
+    dispatch path donates on accelerator backends and stays a no-op on CPU.
+    The flag joins the trace-factory keys (a donating trace and a
+    non-donating one are different executables).
+    """
+    return jax.default_backend() != "cpu"
+
+
 @_policy_lru
 def _jitted_forward(cfg: CostModelConfig, lowering: str = "ref"):
     return jax.jit(lambda p, g: forward_ensemble(p, g, cfg))
@@ -123,12 +139,19 @@ def _jitted_forward_stacked(
     traditional_mp: bool,
     banding: Optional[BatchBanding] = None,
     lowering: str = "ref",
+    donate: bool = False,
 ):
     # metric only selects the loss/vote, never the forward; any metric works.
     # ``banding`` is the merged batch's static signature-exact stage-3 plan
     # (None: full-depth scan) — part of the trace key, like a shape.
+    # ``donate`` releases the graph batch's device buffers to the launch —
+    # only callers that built the batch themselves for this one call may pass
+    # it (the merged drain path); ``estimate`` takes caller-owned batches.
     cfg = CostModelConfig(metric="latency_p", gnn=gnn, traditional_mp=traditional_mp)
-    return jax.jit(lambda p, g: forward_ensemble(p, g, cfg, banding))
+    return jax.jit(
+        lambda p, g: forward_ensemble(p, g, cfg, banding),
+        donate_argnums=(1,) if donate else (),
+    )
 
 
 @_policy_lru
@@ -143,24 +166,39 @@ def _jitted_placed_forward(cfg: CostModelConfig, static: QueryStatic, lowering: 
 
 @_policy_lru
 def _jitted_placed_forward_stacked(
-    gnn, static: QueryStatic, n_hw: int, chunk: int = 0, lowering: str = "ref"
+    gnn,
+    static: QueryStatic,
+    n_hw: int,
+    chunk: int = 0,
+    lowering: str = "ref",
+    donate: bool = False,
 ):
     # ``chunk`` (the policy's score_chunk) joins the key: the scan structure
-    # it selects is part of the trace, exactly like a shape.
+    # it selects is part of the trace, exactly like a shape.  ``donate``
+    # releases ``a_place`` (per-drain, caller-built) — never the skeleton,
+    # which lives in the estimator's LRU across calls.
     def f(p, skel, a_place):
         return apply_gnn_placed_stacked(p, skel, a_place, static, gnn, n_hw, chunk)
 
-    return jax.jit(f)
+    return jax.jit(f, donate_argnums=(2,) if donate else ())
 
 
 @_policy_lru
-def _jitted_merged_forward(gnn, banding: BatchBanding, max_parents: int, lowering: str = "ref"):
+def _jitted_merged_forward(
+    gnn,
+    banding: BatchBanding,
+    max_parents: int,
+    lowering: str = "ref",
+    donate: bool = False,
+):
     # the cross-query engine: S deduped skeletons + per-row (skel_id,
-    # a_place); banding is the drain's signature-exact static plan
+    # a_place); banding is the drain's signature-exact static plan.
+    # ``donate`` releases the per-drain (skel_id, a_place) buffers — never
+    # ``skels``, the cached device-resident skeleton stack of the mix.
     def f(p, skels, skel_id, a_place):
         return apply_gnn_merged(p, skels, skel_id, a_place, gnn, banding, max_parents)
 
-    return jax.jit(f)
+    return jax.jit(f, donate_argnums=(2, 3) if donate else ())
 
 
 class DeferredResult:
@@ -236,6 +274,7 @@ def placed_predict_fused(
     static: QueryStatic,
     deferred: bool = False,
     chunk: Optional[int] = None,
+    donate: bool = False,
 ) -> Dict[str, np.ndarray]:
     """All metrics' ensembles over one query's candidate placements, fused.
 
@@ -245,6 +284,10 @@ def placed_predict_fused(
     voted exactly like ``placed_predict`` (the stacked-vs-loop equivalence
     test pins this to float tolerance).  ``deferred`` dispatches the forward
     and returns a ``DeferredResult`` whose ``result()`` blocks and splits.
+    ``donate=True`` hands ``a_place``'s device buffer to the launch (freed
+    for the output instead of held alive beside it) — pass it ONLY when the
+    buffer was built for this call and never touched again, as the
+    estimator's drain paths do; a no-op on CPU backends (``_can_donate``).
     """
     assert not stacked.cfgs[0].traditional_mp, (
         "use the generic path for traditional_mp models"
@@ -253,7 +296,8 @@ def placed_predict_fused(
     if chunk is None:
         chunk = active_policy().score_chunk
     fwd = _jitted_placed_forward_stacked(
-        stacked.cfgs[0].gnn, static, n_hw, chunk, active_lowering()
+        stacked.cfgs[0].gnn, static, n_hw, chunk, active_lowering(),
+        donate and _can_donate(),
     )
     raw = fwd(stacked.params, skel, a_place)
     return _maybe_defer(lambda: _split_votes(np.asarray(raw), stacked), deferred)
@@ -471,9 +515,10 @@ class CostEstimator:
                 a_place = np.concatenate([a_place, np.repeat(a_place[-1:], pad, axis=0)])
             a_place = jnp.asarray(a_place)
             if stacked is not None:
+                # a_place was built above for this one call: donate its buffer
                 pending = placed_predict_fused(
                     stacked, skel, a_place, static, deferred=True,
-                    chunk=self.policy.score_chunk,
+                    chunk=self.policy.score_chunk, donate=True,
                 )
                 return _maybe_defer(
                     lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
@@ -552,8 +597,9 @@ class CostEstimator:
             n = int(chunk.op_x.shape[0])
             chunk = pad_batch(chunk, bucket_size(n))
             banding = exact_banding_cached(chunk)
+            # the chunk's device copy exists only for this launch: donate it
             fwd = _jitted_forward_stacked(
-                stacked.cfgs[0].gnn, False, banding, active_lowering()
+                stacked.cfgs[0].gnn, False, banding, active_lowering(), _can_donate()
             )
             raw = fwd(stacked.params, jax.tree_util.tree_map(jnp.asarray, chunk))
             launched.append((raw, n))
@@ -662,9 +708,9 @@ class CostEstimator:
         Returns one metric -> (N_i,) dict per request, order-aligned; answers
         equal per-request ``score`` to float tolerance (the merged engine and
         the placement-specialized engine are the same math in different
-        association orders).  ``use_pallas`` models take the dense broadcast
-        path instead (the kernels own their tiling; the gather formulation is
-        the CPU fast path).
+        association orders).  ``use_pallas`` models ride the same merged
+        engine: its gathers/scatters are kernel-routed through
+        ``kernels/seg_gather`` (see ``gnn.apply_gnn_merged``).
         """
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
         requests = list(requests)
@@ -688,37 +734,21 @@ class CostEstimator:
             mats.append(a)
             groups.setdefault(keys[i], []).append(i)
 
-        if stacked.cfgs[0].gnn.use_pallas:
-            # dense broadcast batch through the kernel-routed stacked engine
-            pieces = []
-            for key, idxs in groups.items():
-                q, c, _ = requests[idxs[0]]
-                host, _, _ = self._skeleton_entry(q, c, key)
-                pieces.append(
-                    broadcast_skeleton(
-                        host,
-                        build_a_place_batch(q, c, np.concatenate([mats[i] for i in idxs])),
-                    )
-                )
-            merged, _ = merge_graph_batches(pieces)
-            sizes = [sum(len(mats[i]) for i in idxs) for idxs in groups.values()]
-            pending = self._merged_forward(merged, sizes, metrics, max_rows, deferred=True)
-        else:
-            index_of, skels_dev, banding, max_parents = self._merged_group_for(
-                requests, groups
-            )
-            blocks, ids = [], []
-            for key, idxs in groups.items():
-                q, c, _ = requests[idxs[0]]
-                block = build_a_place_batch(q, c, np.concatenate([mats[i] for i in idxs]))
-                blocks.append(block)
-                ids.append(np.full(len(block), index_of[key], dtype=np.int32))
-            skel_id = np.concatenate(ids) if len(ids) > 1 else ids[0]
-            a_place = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
-            pending = self._merged_placements_forward(
-                skels_dev, banding, max_parents, skel_id, a_place,
-                [len(b) for b in blocks], stacked, metrics, max_rows, deferred=True,
-            )
+        index_of, skels_dev, banding, max_parents = self._merged_group_for(
+            requests, groups
+        )
+        blocks, ids = [], []
+        for key, idxs in groups.items():
+            q, c, _ = requests[idxs[0]]
+            block = build_a_place_batch(q, c, np.concatenate([mats[i] for i in idxs]))
+            blocks.append(block)
+            ids.append(np.full(len(block), index_of[key], dtype=np.int32))
+        skel_id = np.concatenate(ids) if len(ids) > 1 else ids[0]
+        a_place = np.concatenate(blocks) if len(blocks) > 1 else blocks[0]
+        pending = self._merged_placements_forward(
+            skels_dev, banding, max_parents, skel_id, a_place,
+            [len(b) for b in blocks], stacked, metrics, max_rows, deferred=True,
+        )
 
         def finalize() -> List[Dict[str, np.ndarray]]:
             # split each structure's block back onto its requests, in order
@@ -754,6 +784,11 @@ class CostEstimator:
         )
         banding = exact_banding_cached(skels)
         max_parents = int(np.asarray(skels.a_flow).sum(axis=-2).max(initial=1))
+        # the derived bound must actually cover every row's in-degree — a
+        # violation would mean silently-dropped parents (wrong sums), so the
+        # invariant is checked HERE, where the parent tables' width is fixed
+        # for the lifetime of the cached group
+        validate_merged_parents(skels.a_flow, max_parents, what="merged drain mix")
         entry = (index_of, jax.tree_util.tree_map(jnp.asarray, skels), banding, max_parents)
         self._merged_groups[mix_key] = entry
         while len(self._merged_groups) > self.policy.merged_group_cache_size:
@@ -780,8 +815,10 @@ class CostEstimator:
         recurring drain mix reuses its plan, its jit trace, AND its
         device-resident skeleton stack (``_merged_group_for``).
         """
+        # per-chunk (ids, ap) device copies exist only for their launch:
+        # donate them so a double-buffered drain holds one live batch, not two
         fwd = _jitted_merged_forward(
-            stacked.cfgs[0].gnn, banding, max_parents, active_lowering()
+            stacked.cfgs[0].gnn, banding, max_parents, active_lowering(), _can_donate()
         )
         total = int(a_place.shape[0])
         step = max_rows if max_rows else total

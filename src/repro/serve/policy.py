@@ -99,6 +99,15 @@ class DispatchPolicy:
     #: ``start()`` warmup breadth: candidate buckets pre-compiled per warmed
     #: structure (powers of two up to this).
     warmup_cands: int = 8
+    # -- kernel tiling (Pallas/interpret lowerings only) -------------------------
+    #: Batch-row tile cap of the fused stage-3 sweep kernel
+    #: (``kernels/mp_sweep``): the largest divisor of the batch not above
+    #: this bounds one program's VMEM working set.  Unused on the jnp-oracle
+    #: lowering (XLA owns its own tiling there).
+    sweep_tile_rows: int = 128
+    #: Batch-row tile cap of the segment gather/scatter kernels
+    #: (``kernels/seg_gather``), same contract as ``sweep_tile_rows``.
+    seg_gather_tile: int = 128
     # -- placement search --------------------------------------------------------
     #: Default candidate-sample size of ``PlacementOptimizer.optimize``.
     search_k: int = 64
@@ -135,6 +144,8 @@ class DispatchPolicy:
         _positive("score_chunk", allow_zero=True)
         _positive("max_batch")
         _positive("max_merged_mixes", allow_none=True, allow_zero=True)
+        _positive("sweep_tile_rows")
+        _positive("seg_gather_tile")
         _positive("warmup_cands")
         _positive("search_k")
         _positive("refine_top")
@@ -435,6 +446,80 @@ def _measure_chunk_width(
     return best_chunk, timings
 
 
+def _measure_kernel_tiles(
+    probes: Tuple[int, ...], repeats: int, seed: int
+) -> Tuple[Optional[int], Optional[int], Dict]:
+    """Fastest batch-tile caps for the fused sweep and seg-gather kernels.
+
+    Only meaningful where the kernels actually execute (Pallas on TPU, or the
+    forced interpreter): on the jnp-oracle lowering the caps are dead knobs,
+    so the probe records why it skipped instead of writing noise into the
+    profile.  The probe times the ops directly — a banded batch for
+    ``mp_sweep`` (its levels from the real bucketing policy) and the merged
+    engine's parent-table shapes for ``gather_sum``."""
+    from repro.kernels import active_lowering
+
+    meta: Dict[str, object] = {}
+    if active_lowering() == "ref":
+        meta["skipped"] = "jnp-oracle lowering: kernel tile caps are unused"
+        return None, None, meta
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.bucketing import batch_banding, bucket_size, pad_batch
+    from repro.core.gnn import GNNConfig, _banded_plan, init_gnn
+    from repro.core.graph import build_graph_batch
+    from repro.kernels.mp_sweep import ops as sweep_ops
+    from repro.kernels.seg_gather import ops as seg_ops
+    from repro.placement import sample_assignment_matrix
+
+    ((q, c),) = _probe_structures(1, seed + 202)
+    rng = np.random.default_rng(seed)
+    batch = 256
+    pool = sample_assignment_matrix(q, c, batch, rng, max_tries_factor=400)
+    if not len(pool):
+        meta["skipped"] = "probe structure yielded no valid placements"
+        return None, None, meta
+    g = pad_batch(build_graph_batch(q, c, pool[np.arange(batch) % len(pool)]), bucket_size(batch))
+    levels = _banded_plan(batch_banding(g)).levels
+    cfg = GNNConfig(hidden=32)
+    params = init_gnn(jax.random.PRNGKey(seed), cfg)["op_upd"]
+    h = jnp.asarray(
+        np.random.default_rng(seed + 1).standard_normal((batch, g.op_x.shape[-2], cfg.hidden)),
+        jnp.float32,
+    )
+    a_flow, depth = jnp.asarray(g.a_flow), jnp.asarray(g.op_depth)
+    mask = jnp.asarray(g.op_mask, jnp.float32)
+    pidx = jnp.argsort(-jnp.swapaxes(a_flow, -1, -2), axis=-1)[..., :2]
+    pmask = jnp.take_along_axis(jnp.swapaxes(a_flow, -1, -2), pidx, axis=-1)
+
+    sweep_times: Dict[str, float] = {}
+    gather_times: Dict[str, float] = {}
+    best_sweep = best_gather = None
+    bs = bg = float("inf")
+    for tile in probes:
+        with use_policy(DispatchPolicy(sweep_tile_rows=tile, seg_gather_tile=tile)):
+            def run_sweep():
+                sweep_ops.mp_sweep(params, h, a_flow, depth, mask, levels).block_until_ready()
+
+            def run_gather():
+                seg_ops.gather_sum(h, pidx, pmask).block_until_ready()
+
+            run_sweep(), run_gather()  # warm outside the clock
+            t_s = _best_of(run_sweep, repeats)
+            t_g = _best_of(run_gather, repeats)
+        sweep_times[str(tile)] = t_s
+        gather_times[str(tile)] = t_g
+        if t_s < bs:
+            best_sweep, bs = tile, t_s
+        if t_g < bg:
+            best_gather, bg = tile, t_g
+    meta["sweep_tile_timings_s"] = sweep_times
+    meta["seg_gather_timings_s"] = gather_times
+    return best_sweep, best_gather, meta
+
+
 def autotune(
     quick: bool = False,
     budget_s: Optional[float] = None,
@@ -450,7 +535,10 @@ def autotune(
 
     * the merged-vs-per-structure drain crossover -> ``cross_query_row_limit``
       (selected within the probed band, never extrapolated);
-    * the placed-path panel width -> ``score_chunk``.
+    * the placed-path panel width -> ``score_chunk``;
+    * the kernel batch-tile caps -> ``sweep_tile_rows`` / ``seg_gather_tile``
+      (only where the Pallas/interpret lowerings execute; the jnp-oracle
+      lowering records the skip instead of writing noise).
 
     Everything else keeps ``base`` (default: the built-in defaults) — those
     knobs are capacity bounds, not crossovers.  The profile is written to
@@ -480,6 +568,7 @@ def autotune(
     row_probes = (1, 4, 16) if quick else (1, 2, 4, 8, 16, 32)
     chunk_batch = 256 if quick else 512
     chunk_probes = (64, 256) if quick else (64, 128, 256, 512)
+    tile_probes = (32, 128) if quick else (32, 64, 128, 256)
 
     measurements: Dict[str, object] = {
         "quick": quick,
@@ -487,6 +576,7 @@ def autotune(
         "row_probes": list(row_probes),
         "chunk_probes": list(chunk_probes),
         "chunk_batch": chunk_batch,
+        "tile_probes": list(tile_probes),
     }
     policy = base
     # probes run under the BASE policy so the estimator's own dispatch is the
@@ -516,6 +606,19 @@ def autotune(
                 measurements["score_chunk"] = chunk
         else:
             measurements.setdefault("budget_exhausted", "before chunk probe")
+        if budget_left():
+            sweep_tile, gather_tile, tile_meta = _measure_kernel_tiles(
+                tile_probes, repeats, seed
+            )
+            measurements["kernel_tiles"] = tile_meta
+            if sweep_tile is not None:
+                policy = replace(policy, sweep_tile_rows=sweep_tile)
+                measurements["sweep_tile_rows"] = sweep_tile
+            if gather_tile is not None:
+                policy = replace(policy, seg_gather_tile=gather_tile)
+                measurements["seg_gather_tile"] = gather_tile
+        else:
+            measurements.setdefault("budget_exhausted", "before kernel tile probe")
     measurements["elapsed_s"] = round(time.perf_counter() - t_start, 3)
     path = save_profile(target, policy.validate(), measurements)
     return AutotuneResult(

@@ -1,0 +1,311 @@
+"""Fused stage-3 sweep + segment gather/scatter kernels: parity, grads, and
+the one-launch contract of the sweep path.
+
+Every parity case runs under BOTH off-TPU lowerings of the kernel ops: the
+compiled jnp-oracle (``ref``) and the forced Pallas interpreter
+(``interpret``), which executes the actual kernel bodies.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.core.bucketing import batch_banding, bucket_size, exact_banding, pad_batch
+from repro.core.gnn import (
+    GNNConfig,
+    _banded_plan,
+    apply_gnn_batch,
+    apply_gnn_merged,
+    init_gnn,
+    validate_merged_parents,
+)
+from repro.core.graph import (
+    SLOT_RANGES,
+    batch_graphs,
+    build_a_place_batch,
+    build_graph_skeleton,
+)
+from repro.dsps.generator import WorkloadGenerator
+from repro.training.batching import dataset_from_traces
+from repro.kernels.mp_sweep.ops import mp_sweep
+from repro.kernels.mp_sweep.ref import mp_sweep_ref
+from repro.kernels.mp_update.ref import mp_update_ref
+from repro.kernels.seg_gather.ops import gather_sum, segment_sum
+from repro.kernels.seg_gather.ref import gather_sum_ref, segment_sum_ref
+from repro.placement import sample_assignment_matrix
+
+LOWERINGS = ["ref", "interpret"]
+
+
+def _set_lowering(monkeypatch, lowering):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1" if lowering == "interpret" else "0")
+
+
+def _banded_batch(seed=0, n=24, trim=False):
+    """A mixed-structure bucketed batch + its banding (trimmed: exact)."""
+    ds = dataset_from_traces(WorkloadGenerator(seed=seed).corpus(n), "latency_p")
+    g = pad_batch(ds.graphs, bucket_size(ds.graphs.op_x.shape[0]))
+    banding = exact_banding(g) if trim else batch_banding(g)
+    return jax.tree_util.tree_map(jnp.asarray, g), banding
+
+
+def _sweep_inputs(g, banding, hidden=16, seed=3):
+    params = init_gnn(jax.random.PRNGKey(seed), GNNConfig(hidden=hidden))["op_upd"]
+    rows = g.op_x.shape[-2] if banding.rows is None else len(banding.rows)
+    h = jax.random.normal(jax.random.PRNGKey(seed + 1), (g.op_x.shape[0], rows, hidden))
+    if banding.rows is None:
+        a_flow, depth = g.a_flow, g.op_depth
+        mask = g.op_mask.astype(jnp.float32)
+    else:
+        idx = jnp.asarray(banding.rows)
+        a_flow = jnp.take(jnp.take(g.a_flow, idx, axis=-2), idx, axis=-1)
+        depth = jnp.take(g.op_depth, idx, axis=-1)
+        mask = jnp.take(g.op_mask, idx, axis=-1).astype(jnp.float32)
+    ranges = SLOT_RANGES if banding.rows is None else banding.ranges
+    levels = _banded_plan(banding, ranges).levels
+    return params, h, a_flow, depth, mask, levels
+
+
+@pytest.mark.parametrize("trim", [False, True], ids=["untrimmed", "trimmed"])
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_mp_sweep_matches_per_level_loop(lowering, trim, monkeypatch):
+    """ONE fused sweep call == the sequential per-level mp_update composition
+    it replaces, on trimmed and untrimmed bandings, both lowerings."""
+    _set_lowering(monkeypatch, lowering)
+    g, banding = _banded_batch(seed=7, trim=trim)
+    params, h, a_flow, depth, mask, levels = _sweep_inputs(g, banding)
+    assert len(levels) > 1, "the fused-vs-per-level contrast needs >1 level"
+    fused = mp_sweep(params, h, a_flow, depth, mask, levels)
+    looped = h
+    for d, span, slot_ranges, parent_hi in levels:
+        looped = mp_update_ref(
+            params, looped, a_flow, depth, mask, jnp.asarray(d, depth.dtype),
+            slot_ranges, row_span=span, parent_rows=parent_hi,
+        )
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(looped), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_mp_sweep_grads_match_oracle(lowering, monkeypatch):
+    """Values AND gradients (params, h, a_flow) vs the jnp sweep oracle."""
+    _set_lowering(monkeypatch, lowering)
+    g, banding = _banded_batch(seed=11)
+    params, h, a_flow, depth, mask, levels = _sweep_inputs(g, banding)
+    a_flow = a_flow.astype(jnp.float32)
+
+    def loss_op(p, hh, aa):
+        return jnp.sum(mp_sweep(p, hh, aa, depth, mask, levels) ** 2)
+
+    def loss_ref(p, hh, aa):
+        return jnp.sum(mp_sweep_ref(p, hh, aa, depth, mask, levels) ** 2)
+
+    gk = jax.grad(loss_op, argnums=(0, 1, 2))(params, h, a_flow)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(params, h, a_flow)
+    for a, b in zip(jax.tree_util.tree_leaves(gk), jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_sweep_path_is_one_stage3_launch(monkeypatch):
+    """The tentpole contract, counter-asserted: a banded ``use_pallas``
+    forward issues exactly ONE stage-3 kernel launch (the fused sweep), and
+    ZERO per-level mp_update launches."""
+    from repro.kernels import mp_sweep as sweep_pkg
+    from repro.kernels import mp_update as update_pkg
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    calls = {"sweep": 0, "update": 0}
+    orig_sweep = sweep_pkg.kernel.mp_sweep_pallas
+    orig_update = update_pkg.kernel.mp_update_pallas
+
+    def counting_sweep(*a, **k):
+        calls["sweep"] += 1
+        return orig_sweep(*a, **k)
+
+    def counting_update(*a, **k):
+        calls["update"] += 1
+        return orig_update(*a, **k)
+
+    monkeypatch.setattr(sweep_pkg.ops, "mp_sweep_pallas", counting_sweep)
+    monkeypatch.setattr(update_pkg.ops, "mp_update_pallas", counting_update)
+    g, banding = _banded_batch(seed=5)
+    assert len(banding.levels) > 1
+    params = init_gnn(jax.random.PRNGKey(0), GNNConfig(hidden=16))
+    cfg = GNNConfig(hidden=16, use_pallas=True)
+    out = apply_gnn_batch(params, g, cfg, banding)  # eager: ops dispatch per call
+    assert out.shape[-1] == 1
+    assert calls["sweep"] == 1, f"expected ONE fused sweep launch, got {calls['sweep']}"
+    assert calls["update"] == 0, "per-level mp_update must not launch on the sweep path"
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_gather_sum_parity_and_grads(lowering, monkeypatch):
+    _set_lowering(monkeypatch, lowering)
+    key = jax.random.PRNGKey(0)
+    B, N, H, R, P = 6, 12, 16, 9, 2  # R non-power-of-2: exercises row padding
+    h = jax.random.normal(key, (B, N, H))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (B, R, P), 0, N)
+    w = (jax.random.uniform(jax.random.PRNGKey(2), (B, R, P)) > 0.4).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(gather_sum(h, idx, w)),
+        np.asarray(gather_sum_ref(h, idx, w)),
+        rtol=1e-5, atol=1e-6,
+    )
+    gk = jax.grad(lambda hh, ww: jnp.sum(gather_sum(hh, idx, ww) ** 2), argnums=(0, 1))(h, w)
+    gr = jax.grad(lambda hh, ww: jnp.sum(gather_sum_ref(hh, idx, ww) ** 2), argnums=(0, 1))(h, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_segment_sum_parity_and_grads(lowering, monkeypatch):
+    _set_lowering(monkeypatch, lowering)
+    B, N, H, S = 6, 12, 16, 5
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, N, H))
+    seg = jax.random.randint(jax.random.PRNGKey(1), (B, N), 0, S)
+    np.testing.assert_allclose(
+        np.asarray(segment_sum(x, seg, S)),
+        np.asarray(segment_sum_ref(x, seg, S)),
+        rtol=1e-5, atol=1e-6,
+    )
+    gk = jax.grad(lambda xx: jnp.sum(segment_sum(xx, seg, S) ** 2))(x)
+    gr = jax.grad(lambda xx: jnp.sum(segment_sum_ref(xx, seg, S) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-5, atol=1e-5)
+
+
+def _merged_inputs(seed=0, n=8):
+    gen = WorkloadGenerator(seed=seed)
+    c = gen.cluster(4)
+    qs = [gen.query(kind=k, name=f"m{i}") for i, k in enumerate(("linear", "two_way"))]
+    rng = np.random.default_rng(seed)
+    skels = batch_graphs([build_graph_skeleton(q, c) for q in qs])
+    blocks, ids = [], []
+    for i, q in enumerate(qs):
+        a = sample_assignment_matrix(q, c, n, rng, max_tries_factor=400)
+        blocks.append(build_a_place_batch(q, c, a))
+        ids.append(np.full(len(a), i, dtype=np.int32))
+    banding = exact_banding(skels)
+    max_parents = int(np.asarray(skels.a_flow).sum(axis=-2).max(initial=1))
+    return (
+        jax.tree_util.tree_map(jnp.asarray, skels),
+        jnp.asarray(np.concatenate(ids)),
+        jnp.asarray(np.concatenate(blocks)),
+        banding,
+        max_parents,
+    )
+
+
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_merged_engine_use_pallas_matches_jnp(lowering, monkeypatch):
+    """``apply_gnn_merged`` is no longer use_pallas-excluded: the kernel-routed
+    engine (seg_gather + banked_mlp ops) matches the jnp path, values and
+    grads, under both lowerings."""
+    _set_lowering(monkeypatch, lowering)
+    skels, skel_id, a_place, banding, max_parents = _merged_inputs(seed=13)
+    cfg_j = GNNConfig(hidden=16)
+    cfg_p = GNNConfig(hidden=16, use_pallas=True)
+    params = jax.tree_util.tree_map(
+        lambda p: p[None], init_gnn(jax.random.PRNGKey(2), cfg_j)
+    )  # 1-member stack
+    out_j = apply_gnn_merged(params, skels, skel_id, a_place, cfg_j, banding, max_parents)
+    out_p = apply_gnn_merged(params, skels, skel_id, a_place, cfg_p, banding, max_parents)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p), rtol=1e-4, atol=1e-4)
+
+    def loss(p, cfg):
+        return jnp.sum(
+            apply_gnn_merged(p, skels, skel_id, a_place, cfg, banding, max_parents) ** 2
+        )
+
+    gj = jax.grad(lambda p: loss(p, cfg_j))(params)
+    gp = jax.grad(lambda p: loss(p, cfg_p))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(gj), jax.tree_util.tree_leaves(gp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)
+
+
+def test_merged_in_degree_validation_raises():
+    """A max_parents bound below the stack's true in-degree must raise a
+    clear error instead of silently truncating parents (wrong sums)."""
+    skels, skel_id, a_place, banding, max_parents = _merged_inputs(seed=17)
+    assert max_parents >= 2, "a join query must have a >=2-parent row"
+    cfg = GNNConfig(hidden=16)
+    params = jax.tree_util.tree_map(
+        lambda p: p[None], init_gnn(jax.random.PRNGKey(0), cfg)
+    )
+    with pytest.raises(ValueError, match="in-degree .* > max_parents"):
+        apply_gnn_merged(
+            params, skels, skel_id, a_place, cfg, banding, max_parents - 1
+        )
+    with pytest.raises(ValueError, match="wrong sums"):
+        validate_merged_parents(skels.a_flow, 0)
+    validate_merged_parents(skels.a_flow, max_parents)  # exact bound passes
+
+
+def test_merged_group_build_validates_in_degree(monkeypatch):
+    """The estimator derives max_parents at merged-group build time and pins
+    the invariant there; an (artificially) understated bound raises."""
+    from repro.serve import estimator as estimator_mod
+
+    called = {}
+    orig = estimator_mod.validate_merged_parents
+
+    def spy(a_flow, max_parents, **kw):
+        called["max_parents"] = max_parents
+        return orig(a_flow, max_parents, **kw)
+
+    monkeypatch.setattr(estimator_mod, "validate_merged_parents", spy)
+    from repro.core.model import CostModelConfig, init_cost_model
+    from repro.serve.estimator import CostEstimator
+
+    models = {}
+    for i, metric in enumerate(("latency_p", "success")):
+        cfg = CostModelConfig(metric=metric, n_ensemble=2, gnn=GNNConfig(hidden=16))
+        models[metric] = (init_cost_model(jax.random.PRNGKey(i), cfg), cfg)
+    est = CostEstimator(models)
+    gen = WorkloadGenerator(seed=3)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i, k in enumerate(("linear", "two_way")):
+        q, c = gen.query(kind=k, name=f"v{i}"), gen.cluster(3)
+        reqs.append((q, c, sample_assignment_matrix(q, c, 4, rng, max_tries_factor=400)))
+    out = est.score_many(reqs)
+    assert len(out) == 2 and called["max_parents"] >= 1
+
+
+def test_donation_is_backend_gated():
+    """``_can_donate`` is False on CPU (XLA:CPU cannot reuse donated buffers)
+    and the donating trace factories still produce correct results."""
+    from repro.serve import estimator as estimator_mod
+
+    assert estimator_mod._can_donate() == (jax.default_backend() != "cpu")
+    # the donate flag is part of the trace key; both variants must agree
+    skels, skel_id, a_place, banding, max_parents = _merged_inputs(seed=19)
+    cfg = GNNConfig(hidden=16)
+    params = jax.tree_util.tree_map(
+        lambda p: p[None], init_gnn(jax.random.PRNGKey(1), cfg)
+    )
+    f_plain = estimator_mod._jitted_merged_forward(cfg, banding, max_parents, "ref", False)
+    f_donate = estimator_mod._jitted_merged_forward(
+        cfg, banding, max_parents, "ref", estimator_mod._can_donate()
+    )
+    out_a = f_plain(params, skels, skel_id, a_place)
+    out_b = f_donate(params, skels, jnp.array(skel_id), jnp.array(a_place))
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b), rtol=1e-5, atol=1e-6)
+
+
+def test_deep_update_bank_keeps_banded_plan():
+    """>2-layer update banks cannot ride the fused sweep; the engine must
+    fall back to the per-level banded loop (jnp) and still be correct."""
+    from repro.core.gnn import _sweep_fusable
+
+    g, banding = _banded_batch(seed=23)
+    cfg = GNNConfig(hidden=16, update_layers=3)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    assert not _sweep_fusable(params)
+    out_banded = apply_gnn_batch(params, g, cfg, banding)
+    out_plain = apply_gnn_batch(params, g, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_banded), np.asarray(out_plain), rtol=1e-4, atol=1e-5
+    )
