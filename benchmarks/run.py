@@ -19,9 +19,9 @@ def main() -> None:
     args = ap.parse_args()
     only = args.only.split(",") if args.only != "all" else None
 
-    from benchmarks import exp1_accuracy, exp2_placement, exp3456, exp7_ablations
-    from benchmarks import kernel_bench, kernels_bench, load_harness, placement_bench
-    from benchmarks import roofline_report, serve_bench, training_bench
+    from benchmarks import controller_bench, exp1_accuracy, exp2_placement, exp3456
+    from benchmarks import exp7_ablations, kernel_bench, kernels_bench, load_harness
+    from benchmarks import placement_bench, roofline_report, serve_bench, training_bench
 
     stages = {
         "exp1": exp1_accuracy.main,
@@ -30,12 +30,15 @@ def main() -> None:
         "training_engine": lambda: training_bench.main(["--quick"]),
         "serving": lambda: serve_bench.main(["--quick"]),
         "load_harness": lambda: load_harness.main(["--quick"]),
+        "controller": lambda: controller_bench.main(["--quick"]),
         "exp3": exp3456.exp3_interpolation,
         "exp4": exp3456.exp4_extrapolation,
         "exp5": exp3456.exp5_unseen_patterns,
         "exp6": exp3456.exp6_unseen_benchmarks,
         "exp7": exp7_ablations.main,
-        "kernels": kernels_bench.main,
+        # renamed from "kernels": this is the per-op microbenchmark lane, as
+        # opposed to "kernel_sweep" (the fused sweep kernel's gated bench)
+        "kernels_micro": kernels_bench.main,
         "kernel_sweep": lambda: kernel_bench.main(["--quick"]),
         "roofline": lambda: (roofline_report.main("single"), roofline_report.main("multi")),
     }

@@ -74,8 +74,20 @@ echo "== open-loop load harness (quick) =="
 python benchmarks/load_harness.py --quick --min-ratio 2 \
   --baseline benchmarks/baselines/load_harness_quick.json --max-regression 0.10
 
+echo "== continuous placement controller (quick) =="
+# seeded drift+failure scenario: the controller's end-of-run fleet cost must
+# beat the do-nothing static baseline >= 2x (lane is deterministic -- the
+# regression gate vs the recorded baseline trips on behavior changes, not
+# noise), its largest move must respect the DispatchPolicy migration budget
+# and its migration count the replan-every-tick oracle's (asserted inside),
+# and the warm estimator lane's replan p95 is the SLO
+python benchmarks/controller_bench.py --quick --min-ratio 2 \
+  --max-replan-p95-ms 250 \
+  --baseline benchmarks/baselines/controller_bench_quick.json --max-regression 0.10
+
 echo "== examples smoke (API drift gate) =="
 # the examples exercise the public train->bundle->serve surface end to end;
 # tiny corpus/epoch settings via --smoke
 python examples/quickstart.py --smoke
 python examples/optimize_placement.py --smoke
+python examples/controller_demo.py --smoke

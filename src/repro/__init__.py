@@ -11,6 +11,7 @@ it (docs/api.md):
     CostEstimator       the single inference facade (estimate/score/optimize)
     PlacementService    micro-batching front-end for concurrent requests
     PlacementOptimizer  search strategy layer (sample -> score -> refine)
+    PlacementController closed-loop drift-aware re-placement (docs/controller.md)
     DispatchPolicy      host-calibrated dispatch tunables (docs/dispatch.md)
 
 Deeper layers (``repro.core`` engine, ``repro.dsps`` substrate,
@@ -23,6 +24,7 @@ one inference surface (docs/api.md).
 
 __version__ = "0.7.0"
 
+from repro.control import PlacementController
 from repro.core.model import CostModelConfig
 from repro.dsps.generator import WorkloadGenerator
 from repro.serve import CostEstimator, CostModelBundle, DispatchPolicy, PlacementService
@@ -33,6 +35,7 @@ __all__ = [
     "CostModelBundle",
     "CostModelConfig",
     "DispatchPolicy",
+    "PlacementController",
     "PlacementOptimizer",
     "PlacementService",
     "WorkloadGenerator",

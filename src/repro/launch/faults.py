@@ -40,8 +40,12 @@ class VirtualHost:
 class ClusterMonitor:
     """Tracks heartbeats + step latencies; decides evictions."""
 
-    def __init__(self, n_hosts: int, policy: FaultPolicy = FaultPolicy()):
-        self.policy = policy
+    def __init__(self, n_hosts: int, policy: Optional[FaultPolicy] = None):
+        # default must be constructed per-monitor: a dataclass instance in the
+        # signature is evaluated once and shared, so one monitor mutating its
+        # policy (e.g. relaxing the heartbeat timeout) would retune every
+        # other monitor in the process
+        self.policy = policy if policy is not None else FaultPolicy()
         self.hosts: Dict[int, VirtualHost] = {
             i: VirtualHost(host_id=i) for i in range(n_hosts)
         }

@@ -48,6 +48,7 @@ from __future__ import annotations
 import contextlib
 import hashlib
 import json
+import math
 import os
 import platform
 import time
@@ -113,6 +114,40 @@ class DispatchPolicy:
     search_k: int = 64
     #: Elites mutated per hill-climb refinement round (the refinement top-k).
     refine_top: int = 8
+    # -- continuous placement controller (repro.control; docs/controller.md) -----
+    #: Telemetry tick interval [simulated s].  30 s matches the Storm-style
+    #: monitoring loop of the Exp-2b baseline and gives 8 ticks per paper
+    #: 4-minute measurement window — coarse enough that one tick amortizes a
+    #: fused re-scoring pass, fine enough to catch drift inside one window.
+    controller_tick_s: float = 30.0
+    #: Drift-detector window [ticks]: EWMA span and CUSUM minimum run length.
+    #: 4 ticks = 2 minutes of telemetry — half a measurement window, the
+    #: shortest span over which the simulator's log-normal measurement noise
+    #: (sigma=0.12) averages well below real drift steps (>= log 2).
+    detector_window: int = 4
+    #: CUSUM alarm level on the log(observed/predicted) cost residual.  With
+    #: per-tick noise sigma ~= 0.12 and the detector's slack k = 2*sigma, a
+    #: sustained 2x cost drift (residual ~= 0.7) crosses 1.5 within ~3 ticks
+    #: while pure noise needs a >12-sigma excursion — alarms inside one
+    #: detector window without firing on measurement noise.
+    drift_threshold: float = 1.5
+    #: Max window-state bytes one re-placement may move [MB], modeled as
+    #: migration downtime.  64 MB covers the full state of typical corpus
+    #: windows (count windows of ~1e3-1e4 tuples at ~100 B/tuple with JVM
+    #: overhead) while excluding bulk moves of several large stateful ops at
+    #: once; 0 disables migrations entirely (detect-only mode).
+    migration_budget_mb: float = 64.0
+    #: Ticks a re-placed query is held before it may re-plan again.  3 ticks
+    #: covers detector_window - 1 post-migration samples, so the detector
+    #: re-arms on post-move telemetry instead of thrashing on the residual
+    #: spike the migration itself caused.  0 disables the cooldown.
+    replan_cooldown_ticks: int = 3
+    #: Re-placement search breadth: candidate sub-assignments scored per
+    #: affected query.  Half of ``search_k``: the frozen prefix shrinks the
+    #: space (only affected ops move), and re-plan latency is an SLO — 32
+    #: rows ride one fused forward well under the p95 gate in
+    #: benchmarks/controller_bench.py.
+    replan_k: int = 32
     # -- cache capacities (sizing rationale: module docstring) -------------------
     #: Jitted-forward trace entries (all module-level trace caches in
     #: ``serve.estimator`` share this budget anchor).
@@ -140,6 +175,13 @@ class DispatchPolicy:
             if v < 0 or (v == 0 and not allow_zero):
                 raise ValueError(f"DispatchPolicy.{name} must be positive, got {v}")
 
+        def _positive_f(name: str, allow_zero: bool = False):
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError(f"DispatchPolicy.{name} must be a number, got {v!r}")
+            if not math.isfinite(v) or v < 0 or (v == 0 and not allow_zero):
+                raise ValueError(f"DispatchPolicy.{name} must be positive, got {v}")
+
         _positive("cross_query_row_limit", allow_none=True, allow_zero=True)
         _positive("score_chunk", allow_zero=True)
         _positive("max_batch")
@@ -149,6 +191,12 @@ class DispatchPolicy:
         _positive("warmup_cands")
         _positive("search_k")
         _positive("refine_top")
+        _positive_f("controller_tick_s")
+        _positive("detector_window")
+        _positive_f("drift_threshold")
+        _positive_f("migration_budget_mb", allow_zero=True)
+        _positive("replan_cooldown_ticks", allow_zero=True)
+        _positive("replan_k")
         _positive("trace_cache_size")
         _positive("banding_cache_size")
         _positive("skeleton_cache_size")

@@ -1,0 +1,324 @@
+"""Continuous placement controller: drift detection, incremental re-placement,
+migration budget, cooldown, deterministic replay (docs/controller.md).
+
+All decision-quality scenarios score through the noise-free ``SimulatorScorer``
+oracle and seeded ``FleetRuntime`` noise, so every assertion here is
+deterministic — these tests pin controller *behavior*, not statistics.
+"""
+
+from dataclasses import replace as dc_replace
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+from repro.control import (
+    FleetRuntime,
+    PlacementController,
+    ReplanItem,
+    Replanner,
+    ScenarioEvent,
+    SimulatorScorer,
+    run_static,
+)
+from repro.dsps import WorkloadGenerator
+from repro.dsps.hardware import Cluster, HardwareNode
+from repro.launch.faults import ClusterMonitor
+from repro.serve import active_policy
+
+
+@lru_cache(maxsize=1)
+def _corpus():
+    """A pool of small linear queries with known analytic loads on the weak
+    150-cpu hosts below: index 13 ~0.73 ref-cores (stateful agg), 14 ~0.32,
+    2 ~0.42, 4 ~0.07, 6 ~0.03."""
+    gen = WorkloadGenerator(seed=11)
+    return [gen.query(kind="linear", name=f"t{i}") for i in range(16)]
+
+
+def _host(i, cpu=150, ram=4000, bw=200, lat=10):
+    return HardwareNode(i, cpu, ram, bw, lat)
+
+
+def _pin(q, host):
+    return (q, (host,) * q.n_ops())
+
+
+def _controller(runtime, **kw):
+    kw.setdefault("scorer", SimulatorScorer())
+    kw.setdefault("seed", 0)
+    return PlacementController(runtime, **kw)
+
+
+# -- satellite regression: shared mutable default policy ---------------------------
+
+
+def test_cluster_monitor_default_policy_not_shared():
+    """Each monitor must own a fresh FaultPolicy: a dataclass default in the
+    signature would be evaluated once, so relaxing one monitor's timeout
+    would silently retune every other monitor in the process."""
+    a, b = ClusterMonitor(n_hosts=2), ClusterMonitor(n_hosts=2)
+    assert a.policy is not b.policy
+    a.policy.heartbeat_timeout_s = 1.0
+    assert b.policy.heartbeat_timeout_s != 1.0
+
+
+def test_policy_controller_knobs_validate():
+    pol = active_policy()
+    pol.validate()  # defaults must pass
+    for field, bad in [
+        ("controller_tick_s", 0.0),
+        ("detector_window", 0),
+        ("drift_threshold", -1.0),
+        ("migration_budget_mb", -0.5),
+        ("replan_cooldown_ticks", -1),
+        ("replan_k", 0),
+    ]:
+        with pytest.raises(ValueError, match=field):
+            dc_replace(pol, **{field: bad}).validate()
+    # zero is a meaningful setting for these two (no budget / no cooldown)
+    dc_replace(pol, migration_budget_mb=0.0, replan_cooldown_ticks=0).validate()
+
+
+# -- telemetry -----------------------------------------------------------------
+
+
+def test_observed_cluster_is_residual_capacity():
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1)])
+    rt = FleetRuntime([_pin(qs[13], 0), _pin(qs[4], 0)], cluster, seed=0, tick_s=30.0)
+    # query 4's view of host 0 is reduced by query 13's resident load; its
+    # view of the empty host 1 is the raw node
+    view = rt.observed_cluster(1)
+    assert view.node(0).cpu < cluster.node(0).cpu
+    assert view.node(1).cpu == cluster.node(1).cpu
+    # the footprint excludes the query itself
+    own_view = rt.observed_cluster(0)
+    assert own_view.node(0).cpu > rt.observed_cluster(None).node(0).cpu
+
+
+# -- drift: localized re-placement ---------------------------------------------
+
+
+def _isolation_scenario():
+    """Query 0 (heavy, stateful) alone on weak host 0 with a strong spare
+    host 1; queries 1/2 isolated on their own hosts 2/3.  A x6 rate drift on
+    query 0 saturates host 0 and implicates nothing else."""
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1, cpu=600, ram=16000, bw=800, lat=2), _host(2), _host(3)])
+    fleet = [_pin(qs[13], 0), _pin(qs[4], 2), _pin(qs[6], 3)]
+    events = [ScenarioEvent(tick=3, kind="rate_drift", query=0, factor=6.0)]
+    return fleet, cluster, events
+
+
+def test_drift_replaces_only_affected_query():
+    fleet, cluster, events = _isolation_scenario()
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0))
+    init = {qid: ctl.runtime.assignment(qid) for qid in (1, 2)}
+    for _ in range(12):
+        ctl.step()
+        # unaffected queries' assignments stay bit-identical on EVERY tick
+        for qid in (1, 2):
+            np.testing.assert_array_equal(ctl.runtime.assignment(qid), init[qid])
+    rep = ctl.report()
+    log = rep.decision_log()
+    assert log, "drift must trigger at least one decision"
+    assert {d["query_id"] for d in log} == {0}
+    # detection within the window: drift lands at tick 3, the CUSUM needs
+    # detector_window samples, so the alarm + migration land at tick 4
+    drifts = [a for r in rep.records for a in r.alarms]
+    assert {a.query_id for a in drifts} == {0}
+    assert drifts[0].kind == "drift" and drifts[0].tick == 4
+    first = log[0]
+    assert first["action"] == "migrate" and first["tick"] == 4
+    assert not np.array_equal(ctl.runtime.assignment(0), (0,) * len(first["old"]))
+    # the move rescued the query: steady-state fleet cost is healthy again
+    assert rep.final_cost_ms < 100.0
+    # ... while doing nothing leaves the fleet saturated
+    static = run_static(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0), 12)
+    assert static.final_cost_ms > 100.0 * rep.final_cost_ms
+
+
+# -- failure: orphan re-placement ----------------------------------------------
+
+
+def test_node_failure_always_triggers_orphan_replacement():
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1), _host(2, cpu=300, ram=8000)])
+    fleet = [_pin(qs[4], 2), _pin(qs[6], 1)]
+    events = [ScenarioEvent(tick=4, kind="fail", host=2)]
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0))
+    rep = ctl.run(10)
+    # the monitor evicts one heartbeat-timeout after the failure; the stranded
+    # query alarms "orphaned" that same tick and is re-placed immediately
+    orphan_alarms = [a for r in rep.records for a in r.alarms if a.kind == "orphaned"]
+    assert orphan_alarms and orphan_alarms[0].query_id == 0
+    assert orphan_alarms[0].tick == 5
+    tick5 = [d for d in rep.decision_log() if d["tick"] == 5 and d["query_id"] == 0]
+    assert tick5 and tick5[0]["action"] in ("migrate", "accept")
+    # orphan state died with the host: re-homing it is free
+    assert tick5[0]["migration_mb"] == 0.0
+    assert ctl.runtime.orphans(0) == ()
+    assert ctl.runtime.cluster.n_nodes() == 2
+    assert int(max(ctl.runtime.assignment(0))) < 2
+
+
+def test_budget_zero_still_replaces_orphans():
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1), _host(2, cpu=300, ram=8000)])
+    fleet = [_pin(qs[4], 2), _pin(qs[6], 1)]
+    events = [ScenarioEvent(tick=4, kind="fail", host=2)]
+    pol = dc_replace(active_policy(), migration_budget_mb=0.0)
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0), policy=pol)
+    rep = ctl.run(10)
+    tick5 = [d for d in rep.decision_log() if d["tick"] == 5 and d["query_id"] == 0]
+    assert tick5 and tick5[0]["action"] in ("migrate", "accept")
+    assert ctl.runtime.orphans(0) == ()
+
+
+# -- migration budget ----------------------------------------------------------
+
+
+def test_budget_zero_forces_noop_and_records_degradation():
+    fleet, cluster, events = _isolation_scenario()
+    pol = dc_replace(active_policy(), migration_budget_mb=0.0)
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0), policy=pol)
+    rep = ctl.run(12)
+    log = rep.decision_log()
+    assert log and all(d["action"] == "no-op" for d in log)
+    # query 13 carries window state on its aggregate, so every useful move
+    # costs >0 MB and the zero budget blocks it — recorded as such
+    assert log[0]["reason"] == "over migration budget"
+    np.testing.assert_array_equal(ctl.runtime.assignment(0), (0,) * len(log[0]["old"]))
+    assert rep.n_migrations == 0 and rep.migrated_mb == 0.0
+    # the degradation is recorded, not hidden: the blocked decision carries
+    # the (bad) predicted cost of staying, and the fleet stays saturated
+    assert log[0]["current_cost"] > 1000.0
+    assert rep.final_cost_ms > 1000.0
+
+
+def test_default_budget_admits_the_same_move():
+    fleet, cluster, events = _isolation_scenario()
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0))
+    rep = ctl.run(12)
+    migs = [d for d in rep.decision_log() if d["action"] == "migrate"]
+    assert migs and 0.0 < migs[0]["migration_mb"] <= active_policy().migration_budget_mb
+    assert rep.max_migration_mb <= active_policy().migration_budget_mb
+
+
+# -- cooldown ------------------------------------------------------------------
+
+
+def test_cooldown_prevents_thrash():
+    """Two co-located queries saturate their shared host after drift.  Both
+    re-plan the same tick without seeing each other's move, so both hop to
+    the same spare host — which saturates in turn.  With no cooldown this
+    ping-pongs every tick; the cooldown holds each query after a decision
+    and cuts the migration count by the cooldown factor."""
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1)])
+    fleet = [_pin(qs[13], 0), _pin(qs[2], 0)]
+    events = [ScenarioEvent(tick=3, kind="rate_drift", query=0, factor=2.0)]
+
+    def migrations(cooldown: int) -> int:
+        pol = dc_replace(
+            active_policy(), replan_cooldown_ticks=cooldown, detector_window=1
+        )
+        ctl = _controller(
+            FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0), policy=pol
+        )
+        return ctl.run(18).n_migrations
+
+    thrash, damped = migrations(0), migrations(4)
+    assert thrash > 2 * damped
+    assert damped > 0  # cooldown suppresses thrash, not re-placement itself
+
+
+# -- deterministic replay ------------------------------------------------------
+
+
+def test_same_seed_same_decision_log():
+    fleet, cluster, events = _isolation_scenario()
+    events = events + [ScenarioEvent(tick=7, kind="fail", host=3)]
+
+    def run_once():
+        ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0))
+        rep = ctl.run(12)
+        return rep.decision_log(), [r.fleet_cost_ms for r in rep.records]
+
+    log_a, costs_a = run_once()
+    log_b, costs_b = run_once()
+    assert log_a == log_b
+    assert costs_a == costs_b
+    assert any(d["action"] in ("migrate", "accept") for d in log_a)
+
+
+def test_different_controller_seed_may_differ_but_is_self_consistent():
+    fleet, cluster, events = _isolation_scenario()
+    ctl = _controller(FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0), seed=9)
+    rep = ctl.run(12)
+    # candidate redraws are seeded by (controller seed, tick, query): the run
+    # completes and still rescues the fleet
+    assert rep.final_cost_ms < 100.0
+
+
+# -- estimator path ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_estimator():
+    import jax
+
+    from repro.core import CostModelConfig, GNNConfig, init_cost_model
+    from repro.serve import CostEstimator
+
+    models = {}
+    for i, metric in enumerate(("latency_e", "success", "backpressure")):
+        cfg = CostModelConfig(metric=metric, n_ensemble=1, gnn=GNNConfig(hidden=8))
+        models[metric] = (init_cost_model(jax.random.PRNGKey(i), cfg), cfg)
+    return CostEstimator(models)
+
+
+def test_replanner_rides_estimator_score_many(tiny_estimator):
+    """Multiple affected queries in one round go through the estimator's
+    merged cross-query forward; decisions are deterministic per seed key."""
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1)])
+    rt = FleetRuntime([_pin(qs[4], 0), _pin(qs[6], 1)], cluster, seed=0, tick_s=30.0)
+    assert tiny_estimator.supports_cross_query(("latency_e", "success", "backpressure"))
+    rp = Replanner(estimator=tiny_estimator, budget_mb=64.0, replan_k=8)
+    items = [
+        ReplanItem(
+            query_id=qid,
+            query=rt.query(qid),
+            cluster=rt.observed_cluster(qid),
+            current=tuple(int(x) for x in rt.assignment(qid)),
+            free_ops=tuple(range(rt.query(qid).n_ops())),
+            state_mb=tuple(float(x) for x in rt.state_mb(qid)),
+        )
+        for qid in (0, 1)
+    ]
+    d1 = rp.replan_many(items, seed_key=(0, 1))
+    d2 = rp.replan_many(items, seed_key=(0, 1))
+    assert [d.to_dict() for d in d1] == [d.to_dict() for d in d2]
+    assert all(d.n_candidates > 1 for d in d1)
+    assert all(d.action in ("migrate", "no-op") for d in d1)
+
+
+def test_controller_estimator_smoke(tiny_estimator):
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1)])
+    fleet = [_pin(qs[4], 0), _pin(qs[6], 1)]
+    events = [ScenarioEvent(tick=2, kind="rate_drift", query=0, factor=4.0)]
+
+    def run_once():
+        ctl = PlacementController(
+            FleetRuntime(fleet, cluster, events, seed=3, tick_s=30.0),
+            estimator=tiny_estimator,
+            seed=0,
+        )
+        return ctl.run(6).decision_log()
+
+    # warm/cold replay must match: the estimator's caches must not leak into
+    # decisions
+    assert run_once() == run_once()
