@@ -19,9 +19,10 @@ def main() -> None:
     args = ap.parse_args()
     only = args.only.split(",") if args.only != "all" else None
 
-    from benchmarks import controller_bench, exp1_accuracy, exp2_placement, exp3456
-    from benchmarks import exp7_ablations, kernel_bench, kernels_bench, load_harness
-    from benchmarks import placement_bench, roofline_report, serve_bench, training_bench
+    from benchmarks import chaos_bench, controller_bench, exp1_accuracy, exp2_placement
+    from benchmarks import exp3456, exp7_ablations, kernel_bench, kernels_bench
+    from benchmarks import load_harness, placement_bench, roofline_report, serve_bench
+    from benchmarks import training_bench
 
     stages = {
         "exp1": exp1_accuracy.main,
@@ -31,6 +32,7 @@ def main() -> None:
         "serving": lambda: serve_bench.main(["--quick"]),
         "load_harness": lambda: load_harness.main(["--quick"]),
         "controller": lambda: controller_bench.main(["--quick"]),
+        "chaos": lambda: chaos_bench.main(["--quick"]),
         "exp3": exp3456.exp3_interpolation,
         "exp4": exp3456.exp4_extrapolation,
         "exp5": exp3456.exp5_unseen_patterns,

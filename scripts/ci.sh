@@ -85,6 +85,21 @@ python benchmarks/controller_bench.py --quick --min-ratio 2 \
   --max-replan-p95-ms 250 \
   --baseline benchmarks/baselines/controller_bench_quick.json --max-regression 0.10
 
+echo "== chaos harness (quick) =="
+# the fault-injection battery first (all injector seeds pinned inside —
+# breaker/retry/deadline/swap/shadow/rollback semantics, incl. the
+# end-to-end brownout->promote->reject->rollback lifecycle), then the bench:
+python -m pytest -q tests/test_lifecycle.py
+# seeded fault injection (transient raises, hangs, NaN outputs, slow host)
+# against the live service under open-loop load: zero lost/failed futures
+# under every profile (SystemExit inside on violation), the NaN profile must
+# trip the circuit breaker into heuristic fallback, a corrupted on-disk
+# bundle must be rejected by load(verify=True), and the worst-profile p95 of
+# NON-faulted requests must stay within --p95-budget of the fault-free
+# control run and within 10% of the recorded baseline
+python benchmarks/chaos_bench.py --quick --p95-budget 6.0 \
+  --baseline benchmarks/baselines/chaos_bench_quick.json --max-regression 0.10
+
 echo "== examples smoke (API drift gate) =="
 # the examples exercise the public train->bundle->serve surface end to end;
 # tiny corpus/epoch settings via --smoke

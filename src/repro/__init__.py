@@ -27,10 +27,20 @@ __version__ = "0.7.0"
 from repro.control import PlacementController
 from repro.core.model import CostModelConfig
 from repro.dsps.generator import WorkloadGenerator
-from repro.serve import CostEstimator, CostModelBundle, DispatchPolicy, PlacementService
+from repro.serve import (
+    BundleSwapper,
+    CircuitBreaker,
+    CostEstimator,
+    CostModelBundle,
+    DispatchPolicy,
+    PlacementService,
+    ShadowRejected,
+)
 from repro.placement.optimizer import PlacementOptimizer
 
 __all__ = [
+    "BundleSwapper",
+    "CircuitBreaker",
     "CostEstimator",
     "CostModelBundle",
     "CostModelConfig",
@@ -38,6 +48,7 @@ __all__ = [
     "PlacementController",
     "PlacementOptimizer",
     "PlacementService",
+    "ShadowRejected",
     "WorkloadGenerator",
     "__version__",
 ]

@@ -20,6 +20,14 @@ the loop stable:
   placement, so drift is always measured against what the model promised
   *for the placement that is actually running*.
 
+A fourth, optional mechanism handles estimator brown-outs: when a
+``degraded`` probe (typically ``lambda: service.stats.degraded``) reports
+that scores are coming from the circuit-breaker's heuristic fallback, soft
+drift alarms are deferred for that tick — approximate costs keep the fleet
+observable but are not trusted to justify migrations — while hard events
+(orphans, failed ticks) re-plan regardless.  Ticks taken in this state are
+flagged ``TickRecord.degraded``.
+
 Re-placement latency — alarm to chosen migrations, the wall-clock cost of
 the scoring machinery — is recorded per re-plan round and reported as
 p50/p95/p99 the same way ``serve.load.LoadReport`` reports service latency:
@@ -54,6 +62,7 @@ class TickRecord:
     alarms: Tuple[Alarm, ...]
     decisions: Tuple[MigrationDecision, ...]
     replan_latency_s: Optional[float]  # None: no re-plan ran this tick
+    degraded: bool = False  # estimator brown-out: soft re-plans deferred
 
     def n_migrations(self) -> int:
         return sum(1 for d in self.decisions if d.action == "migrate")
@@ -124,8 +133,14 @@ class PlacementController:
         min_gain: float = 0.05,
         seed: int = 0,
         replan_every_tick: bool = False,
+        degraded: Optional[Callable[[], bool]] = None,
     ):
         self.runtime = runtime
+        #: brown-out probe, e.g. ``lambda: svc.stats.degraded`` — while it
+        #: returns True the scorer is answering from the heuristic fallback,
+        #: so soft drift alarms are deferred (re-planning on approximate
+        #: costs would thrash); hard events (orphans, failures) still re-plan
+        self._degraded_probe = degraded
         self.policy = (policy if policy is not None else active_policy()).validate()
         self.seed = int(seed)
         self.replan_every_tick = bool(replan_every_tick)
@@ -198,6 +213,7 @@ class PlacementController:
                 self._pred[qid] = self._score_current(qid)
         alarms = self.detector.update(snap, self._pred)
 
+        degraded = bool(self._degraded_probe()) if self._degraded_probe is not None else False
         if self.replan_every_tick:
             items = [
                 self._item(qid, range(self.runtime.query(qid).n_ops()), hard=True)
@@ -205,6 +221,12 @@ class PlacementController:
             ]
         else:
             items = self._items_from_alarms(snap, alarms)
+            if degraded:
+                # the estimator is browned out: its scores are heuristic
+                # fallbacks, good enough to keep serving but not to justify
+                # migrations.  Defer drift-triggered moves until it recovers;
+                # orphaned/failed queries cannot wait and re-plan anyway.
+                items = [it for it in items if it.hard]
 
         decisions: Tuple[MigrationDecision, ...] = ()
         latency: Optional[float] = None
@@ -233,6 +255,7 @@ class PlacementController:
             alarms=tuple(alarms),
             decisions=decisions,
             replan_latency_s=latency,
+            degraded=degraded,
         )
         self.records.append(rec)
         return rec

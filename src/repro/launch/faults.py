@@ -20,6 +20,32 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 
+def straggler_outliers(
+    samples: Dict[int, float], zscore: float, min_population: int = 4
+) -> List[Tuple[int, float]]:
+    """Median/MAD robust z-score outliers of ``{key: latency}`` samples.
+
+    Returns ``(key, z)`` for every sample whose modified z-score
+    (``0.6745 * (v - median) / MAD``) exceeds ``zscore``.  The median/MAD
+    pair stays meaningful when up to half the population misbehaves — a
+    mean/stddev test would be dragged toward the stragglers it is hunting.
+    Empty below ``min_population``: an outlier needs a population to stand
+    out from.  Shared by ``ClusterMonitor`` (slow SPMD hosts) and the chaos
+    harness (slow-host request tails, ``benchmarks/chaos_bench.py``).
+    """
+    if len(samples) < min_population:
+        return []
+    vals = np.array(list(samples.values()), dtype=np.float64)
+    med = np.median(vals)
+    mad = np.median(np.abs(vals - med)) + 1e-9
+    out: List[Tuple[int, float]] = []
+    for key, v in samples.items():
+        z = 0.6745 * (float(v) - med) / mad
+        if z > zscore:
+            out.append((key, float(z)))
+    return out
+
+
 @dataclass
 class FaultPolicy:
     heartbeat_timeout_s: float = 60.0
@@ -80,14 +106,8 @@ class ClusterMonitor:
             for h in live
             if len(h.step_times) >= min_steps
         }
-        if len(recent) >= 4:
-            vals = np.array(list(recent.values()))
-            med = np.median(vals)
-            mad = np.median(np.abs(vals - med)) + 1e-9
-            for hid, v in recent.items():
-                z = 0.6745 * (v - med) / mad
-                if z > self.policy.straggler_zscore:
-                    out.append((hid, f"straggler(z={z:.1f})"))
+        for hid, z in straggler_outliers(recent, self.policy.straggler_zscore):
+            out.append((hid, f"straggler(z={z:.1f})"))
         return out
 
     def evict(self, host_id: int, reason: str, now: float) -> None:

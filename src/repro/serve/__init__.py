@@ -14,10 +14,16 @@ on ``DispatchPolicy`` (serve/policy.py): ``autotune()`` calibrates them to
 the running host, ``resolve_policy()`` applies the persisted profile / env
 override, and ``stacking`` holds the fused multi-metric ensemble helpers
 retired out of ``core/model.py`` in 0.7.
+
+The fault path (docs/robustness.md) is ``lifecycle`` — shadow-evaluated
+bundle hot-swap with rollback (``BundleSwapper``), circuit-breaker
+degradation (``CircuitBreaker`` + ``fallback_scores``) — and ``chaos``, the
+seeded fault injectors its guarantees are benchmarked under.
 """
 
 from repro.serve.bundle import (
     BUNDLE_SCHEMA_VERSION,
+    BundleIntegrityError,
     BundleVersionError,
     CostModelBundle,
     LazyModels,
@@ -26,10 +32,19 @@ from repro.serve.bundle import (
     layout_descriptor,
     merge_bundles,
 )
-from repro.serve.estimator import CostEstimator, DeferredResult
+from repro.serve.estimator import CostEstimator, DeferredResult, NonFiniteEstimate
+from repro.serve.lifecycle import (
+    BundleSwapper,
+    CircuitBreaker,
+    ShadowRejected,
+    ShadowVerdict,
+    fallback_scores,
+)
 from repro.serve.policy import (
     AutotuneResult,
     DispatchPolicy,
+    DispatchProfileWarning,
+    RetryPolicy,
     active_policy,
     autotune,
     host_fingerprint,
@@ -50,28 +65,43 @@ from repro.serve.load import (
     run_open_loop,
     score_request_stream,
 )
-from repro.serve.service import PlacementService, ServiceOverloadError, ServiceStats
+from repro.serve.service import (
+    EstimateTimeoutError,
+    PlacementService,
+    ServiceOverloadError,
+    ServiceStats,
+)
 
 __all__ = [
     "AutotuneResult",
     "BUNDLE_SCHEMA_VERSION",
+    "BundleIntegrityError",
+    "BundleSwapper",
     "BundleVersionError",
+    "CircuitBreaker",
     "CostModelBundle",
     "CostEstimator",
     "DeferredResult",
     "DispatchPolicy",
+    "DispatchProfileWarning",
+    "EstimateTimeoutError",
     "KneePoint",
     "LazyModels",
     "LoadReport",
+    "NonFiniteEstimate",
     "PlacementService",
+    "RetryPolicy",
     "ServiceOverloadError",
     "ServiceStats",
+    "ShadowRejected",
+    "ShadowVerdict",
     "StackedEnsembles",
     "active_policy",
     "autotune",
     "bundle_from_checkpoint",
     "bursty_arrivals",
     "corpus_fingerprint",
+    "fallback_scores",
     "find_knee",
     "host_fingerprint",
     "latency_quantiles",

@@ -65,6 +65,14 @@ class BundleVersionError(RuntimeError):
     """The bundle's schema or slot layout is incompatible with this build."""
 
 
+class BundleIntegrityError(RuntimeError):
+    """The bundle's on-disk arrays are unreadable (truncated/corrupt npz,
+    missing or mis-shaped params leaves).  Raised by
+    ``CostModelBundle.load(verify=True)`` at load time — the lifecycle path
+    verifies candidates up front so a lazy bundle can never defer corruption
+    discovery to its first forward mid-drain."""
+
+
 def _config_to_manifest(cfg: CostModelConfig) -> Dict:
     return {
         "metric": cfg.metric,
@@ -119,7 +127,9 @@ class CostModelBundle:
         return save_checkpoint(directory, 0, state, extra=manifest, keep=1)
 
     @classmethod
-    def load(cls, directory: str, lazy: bool = True) -> "CostModelBundle":
+    def load(
+        cls, directory: str, lazy: bool = True, verify: bool = False
+    ) -> "CostModelBundle":
         """Load a bundle, refusing incompatible schema/layout versions.
 
         The manifest (configs, meta, compatibility contracts) is always read
@@ -129,6 +139,13 @@ class CostModelBundle:
         the filters' weights.  ``CostEstimator`` preserves the laziness;
         anything that walks ``models.items()`` (``save``, ``merge_bundles``)
         simply forces the load.
+
+        ``verify=True`` deserializes every metric's params once up front and
+        raises ``BundleIntegrityError`` on any unreadable/mis-shaped leaf —
+        a lazy bundle otherwise defers corruption discovery to the first
+        forward that touches the bad metric, mid-drain.  The verification
+        pass discards the arrays, so a verified lazy bundle still holds no
+        params in memory until first use.
         """
         step = latest_step(directory)
         if step is None:
@@ -138,6 +155,16 @@ class CostModelBundle:
             manifest = json.load(f)["extra"]
         _check_compatible(manifest, directory)
         cfgs = {m: _config_from_manifest(spec) for m, spec in manifest["configs"].items()}
+        if verify:
+            npz_path = os.path.join(step_dir, "arrays.npz")
+            for m, cfg in cfgs.items():
+                try:
+                    _params_from_npz(npz_path, m, cfg, f"bundle arrays at {npz_path}")
+                except Exception as e:
+                    raise BundleIntegrityError(
+                        f"bundle at {directory} failed verification for metric "
+                        f"{m!r}: {e.__class__.__name__}: {e}"
+                    ) from e
         if lazy:
             return cls(models=LazyModels(step_dir, cfgs), meta=manifest.get("meta", {}))
         like = {m: init_cost_model(jax.random.PRNGKey(0), cfg) for m, cfg in cfgs.items()}

@@ -201,6 +201,40 @@ def _jitted_merged_forward(
     return jax.jit(f, donate_argnums=(2, 3) if donate else ())
 
 
+class NonFiniteEstimate(RuntimeError):
+    """An estimator output contained NaN/Inf.
+
+    Raised by the always-on finiteness guard on every facade output
+    (``estimate``/``score``/``estimate_many``/``score_many``) instead of
+    returning garbage costs to the optimizer: a NaN cost compares false
+    against everything, so an argmin over candidates would silently pick an
+    arbitrary placement.  ``PlacementService`` counts these in
+    ``ServiceStats.n_nonfinite`` and feeds them to the circuit breaker
+    (docs/robustness.md).
+    """
+
+
+def _check_finite(kind: str, out):
+    """Raise ``NonFiniteEstimate`` if any output array has NaN/Inf.
+
+    ``out`` is a metric -> array dict or a sequence of them (the facade's
+    two output shapes); one vectorized ``np.isfinite`` per array.
+    """
+    items = out if isinstance(out, (list, tuple)) else (out,)
+    for d in items:
+        if d is None:
+            continue
+        for m, v in d.items():
+            v = np.asarray(v)
+            if v.dtype.kind == "f" and not np.isfinite(v).all():
+                bad = int(np.size(v) - np.count_nonzero(np.isfinite(v)))
+                raise NonFiniteEstimate(
+                    f"{kind} produced {bad} non-finite value(s) for metric "
+                    f"{m!r} (shape {v.shape})"
+                )
+    return out
+
+
 class DeferredResult:
     """Device work already dispatched; the host-side finalize is deferred.
 
@@ -340,6 +374,45 @@ class CostEstimator:
         # a monitoring loop) re-enters with zero stacking/banding/transfer.
         self._merged_groups: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self._optimizer = None
+        # fault-injection / observation hooks (serve.chaos): objects with
+        # optional ``before(kind, n)`` / ``after(kind, out) -> out | None``
+        self._hooks: List[object] = []
+
+    # -- hooks (the chaos-injection and observation seam; docs/robustness.md) -----
+
+    def add_hook(self, hook) -> None:
+        """Install a call hook.  ``before(kind, n)`` runs at dispatch time of
+        every facade call (``kind`` in {"estimate", "score", "estimate_many",
+        "score_many"}, ``n`` the row/graph count) and may raise or block —
+        exactly what a real fault does.  ``after(kind, out)`` runs at
+        finalize time (inside ``DeferredResult.result()`` for deferred
+        calls) and may return a replacement output; the finiteness guard
+        runs AFTER all hooks, so injected NaNs are caught like real ones."""
+        self._hooks.append(hook)
+
+    def remove_hook(self, hook) -> None:
+        self._hooks.remove(hook)
+
+    def _before(self, kind: str, n: int) -> None:
+        for h in self._hooks:
+            before = getattr(h, "before", None)
+            if before is not None:
+                before(kind, n)
+
+    def _finish(self, kind: str, finalize, deferred: bool):
+        """Wrap a finalize thunk with after-hooks + the finiteness guard."""
+
+        def run():
+            out = finalize()
+            for h in self._hooks:
+                after = getattr(h, "after", None)
+                if after is not None:
+                    repl = after(kind, out)
+                    if repl is not None:
+                        out = repl
+            return _check_finite(kind, out)
+
+        return _maybe_defer(run, deferred)
 
     @classmethod
     def from_bundle(
@@ -347,6 +420,7 @@ class CostEstimator:
         bundle,
         corpus_fingerprint: Optional[str] = None,
         policy: Optional[DispatchPolicy] = None,
+        strict_provenance: bool = False,
     ) -> "CostEstimator":
         """Facade over a bundle's models (laziness preserved).
 
@@ -356,6 +430,10 @@ class CostEstimator:
         exist and disagree, a warning flags the provenance mismatch — the
         models still serve (retraining on refreshed labels is legitimate),
         but silently comparing them against the wrong corpus is not.
+        ``strict_provenance=True`` upgrades the warning to a
+        ``bundle.BundleVersionError`` — the lifecycle path (candidate
+        bundles promoted into a live service) must never serve a model of
+        unknown ancestry.
         """
         meta = bundle.meta or {}
         recorded = meta.get("corpus_fingerprint")
@@ -364,12 +442,16 @@ class CostEstimator:
             and recorded is not None
             and recorded != corpus_fingerprint
         ):
-            warnings.warn(
+            msg = (
                 f"bundle was trained on corpus {recorded!r} but the caller "
                 f"expects {corpus_fingerprint!r}; predictions are served "
-                "against data the models never saw (provenance mismatch)",
-                stacklevel=2,
+                "against data the models never saw (provenance mismatch)"
             )
+            if strict_provenance:
+                from repro.serve.bundle import BundleVersionError
+
+                raise BundleVersionError(msg)
+            warnings.warn(msg, stacklevel=2)
         return cls(bundle.models, meta=meta, policy=policy)
 
     @property
@@ -407,6 +489,7 @@ class CostEstimator:
         """
         metrics = tuple(metrics) if metrics is not None else tuple(self.models)
         g = self._as_graphs(batch)
+        self._before("estimate", int(g.op_x.shape[0]) if g.op_x.ndim == 3 else 1)
         stacked = self._stacked_for(metrics)
         if stacked is None:  # mixed architectures: per-metric forwards, shared batch
             lowering = active_lowering()
@@ -414,7 +497,8 @@ class CostEstimator:
                 m: _jitted_forward(self.models[m][1], lowering)(self.models[m][0], g)
                 for m in metrics
             }
-            return _maybe_defer(
+            return self._finish(
+                "estimate",
                 lambda: {
                     m: _ensemble_vote(np.asarray(raws[m]), self.models[m][1])
                     for m in metrics
@@ -425,7 +509,9 @@ class CostEstimator:
             stacked.cfgs[0].gnn, stacked.cfgs[0].traditional_mp, None, active_lowering()
         )
         raw = fwd(stacked.params, g)
-        return _maybe_defer(lambda: _split_votes(np.asarray(raw), stacked), deferred)
+        return self._finish(
+            "estimate", lambda: _split_votes(np.asarray(raw), stacked), deferred
+        )
 
     def proba(self, batch, metric: str) -> np.ndarray:
         """Mean ensemble probability for one classification metric."""
@@ -495,6 +581,8 @@ class CostEstimator:
                 graphs = pad_batch(
                     build_graph_batch(query, cluster, assignments), bucket_size(n)
                 )
+                # hooks + the finiteness guard fire inside the delegated
+                # ``estimate`` (kind "estimate"), not a second time here
                 pending = self.estimate(graphs, metrics, deferred=True)
                 return _maybe_defer(
                     lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
@@ -509,6 +597,7 @@ class CostEstimator:
             n = len(assignments)
             if n == 0:  # not assert: callers (the service) rely on it under -O
                 raise ValueError("no candidates to score")
+            self._before("score", n)
             a_place = build_a_place_batch(query, cluster, assignments)
             pad = bucket_size(n) - n
             if pad:
@@ -520,8 +609,10 @@ class CostEstimator:
                     stacked, skel, a_place, static, deferred=True,
                     chunk=self.policy.score_chunk, donate=True,
                 )
-                return _maybe_defer(
-                    lambda: {m: v[:n] for m, v in pending.result().items()}, deferred
+                return self._finish(
+                    "score",
+                    lambda: {m: v[:n] for m, v in pending.result().items()},
+                    deferred,
                 )
             # heterogeneous (non-fusable) configs: per-metric loop, computed
             # eagerly — the rare path keeps no deferral, only the wrapper type
@@ -531,7 +622,7 @@ class CostEstimator:
                 )[:n]
                 for m in metrics
             }
-            return _maybe_defer(lambda: out, deferred)
+            return self._finish("score", lambda: out, deferred)
 
         return score
 
@@ -645,12 +736,14 @@ class CostEstimator:
             if g.op_x.ndim == 2:  # single graph: promote to a batch of one
                 g = jax.tree_util.tree_map(lambda x: x[None], g)
             host.append(g)
-        if sum(int(g.op_x.shape[0]) for g in host) == 0:
+        total_graphs = sum(int(g.op_x.shape[0]) for g in host)
+        if total_graphs == 0:
             raise ValueError("no graphs to estimate")
         if not self.supports_cross_query(metrics):
             # heterogeneous / ablation configs: per-batch fallback, chunked
             # and bucket-padded exactly like the merged path; every chunk is
-            # dispatched before any is blocked on
+            # dispatched before any is blocked on.  Hooks + the finiteness
+            # guard fire inside the delegated ``estimate`` calls.
             pendings: List[Optional[List[Tuple]]] = []
             for g in host:
                 total = int(g.op_x.shape[0])
@@ -682,8 +775,10 @@ class CostEstimator:
                 ]
 
             return _maybe_defer(finalize_fallback, deferred)
+        self._before("estimate_many", total_graphs)
         merged, sizes = merge_graph_batches(host)
-        return self._merged_forward(merged, sizes, metrics, max_rows, deferred=deferred)
+        pending = self._merged_forward(merged, sizes, metrics, max_rows, deferred=True)
+        return self._finish("estimate_many", pending.result, deferred)
 
     def score_many(
         self,
@@ -717,6 +812,7 @@ class CostEstimator:
         if not requests:
             return _maybe_defer(lambda: [], deferred)
         if not self.supports_cross_query(metrics):
+            # hooks + the guard fire inside the delegated ``score`` calls
             per_req = [self.score(q, c, a, metrics, deferred=True) for q, c, a in requests]
             return _maybe_defer(lambda: [p.result() for p in per_req], deferred)
         stacked = self._stacked_for(metrics)
@@ -733,6 +829,7 @@ class CostEstimator:
                 raise ValueError("no candidates to score")
             mats.append(a)
             groups.setdefault(keys[i], []).append(i)
+        self._before("score_many", sum(len(a) for a in mats))
 
         index_of, skels_dev, banding, max_parents = self._merged_group_for(
             requests, groups
@@ -762,7 +859,7 @@ class CostEstimator:
                     off += n
             return out
 
-        return _maybe_defer(finalize, deferred)
+        return self._finish("score_many", finalize, deferred)
 
     def _merged_group_for(self, requests, groups) -> Tuple:
         """(key -> skeleton index, device skeleton stack, banding,

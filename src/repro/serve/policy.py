@@ -52,6 +52,7 @@ import math
 import os
 import platform
 import time
+import warnings
 from dataclasses import asdict, dataclass, fields, replace
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
@@ -64,6 +65,27 @@ PROFILE_SCHEMA_VERSION = 1
 PROFILE_ENV = "REPRO_DISPATCH_PROFILE"
 
 _DEFAULT_CACHE_DIR = Path("~/.cache/repro/dispatch")
+
+
+class DispatchProfileWarning(UserWarning):
+    """A dispatch profile exists on disk but was rejected (corrupt, stale,
+    or recorded on another host) — the process runs built-in defaults."""
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Seeded exponential-backoff retry schedule for transient estimator
+    failures (a view over the ``retry_*`` fields of ``DispatchPolicy``;
+    consumed by ``PlacementService``).  ``max_attempts`` counts the first
+    try: 1 disables retries."""
+
+    max_attempts: int = 2
+    backoff_s: float = 0.02
+    jitter: float = 0.5
+
+    def sleep_s(self, attempt: int, u: float) -> float:
+        """Backoff before retry ``attempt`` (1-based) given ``u`` ~ U(0,1)."""
+        return self.backoff_s * (2.0 ** (attempt - 1)) * (1.0 + u * self.jitter)
 
 
 @dataclass(frozen=True)
@@ -148,6 +170,67 @@ class DispatchPolicy:
     #: rows ride one fused forward well under the p95 gate in
     #: benchmarks/controller_bench.py.
     replan_k: int = 32
+    # -- serving robustness (serve.lifecycle + serve.service; docs/robustness.md)
+    #: Fraction of drained score requests mirrored through a shadow candidate
+    #: estimator during a ``BundleSwapper`` shadow phase.  0.5 halves the
+    #: shadow-side device load while still covering every structure in a
+    #: mixed stream within ~2x ``shadow_min_requests`` drains.
+    shadow_fraction: float = 0.5
+    #: Minimum mirrored requests before a shadow verdict may accept; below
+    #: this the divergence statistics are noise and ``promote`` rejects with
+    #: an "insufficient shadow traffic" verdict rather than guessing.
+    shadow_min_requests: int = 8
+    #: Minimum Spearman rank correlation between candidate and live placement
+    #: orderings.  Placement search consumes *orderings*, not absolute costs
+    #: (argmin over candidates), so rank agreement is the acceptance signal
+    #: that predicts identical placement decisions; 0.8 tolerates local
+    #: re-ranking among near-ties while rejecting models that invert rankings.
+    shadow_rank_corr_min: float = 0.8
+    #: Maximum mean relative cost error of the candidate vs the live answers.
+    #: Guards the cost *magnitudes* the controller's drift detector consumes
+    #: (a rank-preserving 3x inflation would trip every CUSUM alarm); 0.25
+    #: stays under the detector's sustained-drift alarm level (log 2 ~= 0.7).
+    shadow_rel_err_max: float = 0.25
+    #: Bound on the shadow mirror queue (requests awaiting candidate scoring
+    #: off the critical path).  When full, new mirror samples are dropped —
+    #: shadow evaluation sheds load, it never backpressures live traffic.
+    shadow_queue_depth: int = 64
+    #: Drained requests observed after a promotion before the health verdict.
+    #: One breaker window (x2) of post-swap traffic: long enough to see a
+    #: systematic regression, short enough to roll back within seconds.
+    health_window_requests: int = 32
+    #: Max (degraded + non-finite + failed + timed-out) / drained over the
+    #: post-promotion health window before auto-rollback.  0.1 sits well
+    #: above the healthy-path error rate (~0 on a good bundle) and below the
+    #: breaker's open threshold — rollback fires before the breaker trips.
+    health_error_rate_max: float = 0.1
+    #: Total attempts per estimator call (1 = no retry).  2 covers the
+    #: transient single-shot failures chaos testing injects without letting
+    #: a deterministic failure triple drain latency.
+    retry_max_attempts: int = 2
+    #: Base of the seeded exponential backoff between retries [s]: attempt k
+    #: sleeps ``retry_backoff_s * 2**k * (1 + U(0,1) * retry_jitter)``.  20 ms
+    #: is one drain's worth of budget — enough for a GC pause or allocator
+    #: hiccup to clear, small enough to stay inside a request deadline.
+    retry_backoff_s: float = 0.02
+    #: Uniform jitter fraction on the backoff (decorrelates retry storms
+    #: across workers; 0 disables).
+    retry_jitter: float = 0.5
+    #: Sliding window [request outcomes] the circuit breaker evaluates.
+    #: One max-size drain (16 cross-query rows) of history: the breaker
+    #: reacts to the current failure mode, not to stale incidents.
+    breaker_window: int = 16
+    #: Failure fraction over the window that opens the breaker.  0.5 means a
+    #: majority of recent forwards failed — the estimator is effectively
+    #: down, and heuristic answers beat a coin-flip estimator.
+    breaker_failure_rate: float = 0.5
+    #: Outcomes required in-window before the rate is trusted (a single
+    #: failure after idle must not open the breaker).
+    breaker_min_samples: int = 4
+    #: Seconds the breaker stays open before half-open probes the estimator
+    #: with one real request.  0.5 s covers a device reset or cache refill
+    #: without serving minutes of heuristic answers after recovery.
+    breaker_cooldown_s: float = 0.5
     # -- cache capacities (sizing rationale: module docstring) -------------------
     #: Jitted-forward trace entries (all module-level trace caches in
     #: ``serve.estimator`` share this budget anchor).
@@ -182,6 +265,15 @@ class DispatchPolicy:
             if not math.isfinite(v) or v < 0 or (v == 0 and not allow_zero):
                 raise ValueError(f"DispatchPolicy.{name} must be positive, got {v}")
 
+        def _fraction(name: str, lo: float = 0.0, hi: float = 1.0, allow_lo: bool = True):
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError(f"DispatchPolicy.{name} must be a number, got {v!r}")
+            if not math.isfinite(v) or v > hi or v < lo or (v == lo and not allow_lo):
+                raise ValueError(
+                    f"DispatchPolicy.{name} must be in [{lo}, {hi}], got {v}"
+                )
+
         _positive("cross_query_row_limit", allow_none=True, allow_zero=True)
         _positive("score_chunk", allow_zero=True)
         _positive("max_batch")
@@ -197,6 +289,25 @@ class DispatchPolicy:
         _positive_f("migration_budget_mb", allow_zero=True)
         _positive("replan_cooldown_ticks", allow_zero=True)
         _positive("replan_k")
+        _fraction("shadow_fraction")
+        _positive("shadow_min_requests")
+        _fraction("shadow_rank_corr_min", lo=-1.0)
+        _positive_f("shadow_rel_err_max")
+        _positive("shadow_queue_depth")
+        _positive("health_window_requests")
+        _fraction("health_error_rate_max", allow_lo=False)
+        _positive("retry_max_attempts")
+        _positive_f("retry_backoff_s", allow_zero=True)
+        _fraction("retry_jitter")
+        _positive("breaker_window")
+        _fraction("breaker_failure_rate", allow_lo=False)
+        _positive("breaker_min_samples")
+        _positive_f("breaker_cooldown_s", allow_zero=True)
+        if self.breaker_min_samples > self.breaker_window:
+            raise ValueError(
+                "DispatchPolicy.breaker_min_samples must not exceed "
+                f"breaker_window ({self.breaker_min_samples} > {self.breaker_window})"
+            )
         _positive("trace_cache_size")
         _positive("banding_cache_size")
         _positive("skeleton_cache_size")
@@ -219,6 +330,14 @@ class DispatchPolicy:
         if unknown:
             raise ValueError(f"unknown DispatchPolicy fields: {sorted(unknown)}")
         return cls(**d).validate()
+
+    def retry_policy(self) -> RetryPolicy:
+        """The ``retry_*`` fields as one ``RetryPolicy`` view."""
+        return RetryPolicy(
+            max_attempts=self.retry_max_attempts,
+            backoff_s=self.retry_backoff_s,
+            jitter=self.retry_jitter,
+        )
 
     def resolved_double_buffer(self) -> bool:
         """The backend-auto rule, applied: launch-ahead only pays where device
@@ -293,23 +412,44 @@ def load_profile(path, require_host_match: bool = True) -> Optional[Dict]:
     ``None`` — never an exception — on: missing file, unparseable JSON,
     schema-version mismatch, invalid policy fields, or (when
     ``require_host_match``) a recorded fingerprint from another machine.  A
-    stale or foreign profile silently falls back to defaults instead of
-    mis-tuning this host.
+    missing file is the normal untuned-host case and stays silent; a file
+    that *exists* but cannot be used emits one ``DispatchProfileWarning``
+    naming the path and reason, so operators can tell a tuned host from one
+    silently running defaults on top of a corrupt profile.
     """
+
+    def _reject(reason: str) -> None:
+        warnings.warn(
+            f"ignoring dispatch profile {path}: {reason} "
+            "(falling back to built-in defaults; see docs/dispatch.md)",
+            DispatchProfileWarning,
+            stacklevel=3,
+        )
+
     path = Path(path).expanduser()
+    if not path.exists():
+        return None
     try:
         payload = json.loads(path.read_text())
-    except (OSError, ValueError):
+    except (OSError, ValueError) as e:
+        _reject(f"unreadable or unparseable ({e.__class__.__name__})")
         return None
     if not isinstance(payload, dict):
+        _reject("payload is not a JSON object")
         return None
     if payload.get("schema_version") != PROFILE_SCHEMA_VERSION:
+        _reject(
+            f"schema version {payload.get('schema_version')!r} != "
+            f"{PROFILE_SCHEMA_VERSION} (stale profile)"
+        )
         return None
     try:
         policy = DispatchPolicy.from_dict(payload.get("policy", {}))
-    except (TypeError, ValueError):
+    except (TypeError, ValueError) as e:
+        _reject(f"invalid policy payload ({e})")
         return None
     if require_host_match and payload.get("host_fingerprint") != host_fingerprint():
+        _reject("recorded host fingerprint is from another machine")
         return None
     payload["policy_obj"] = policy
     return payload

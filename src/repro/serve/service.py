@@ -69,7 +69,8 @@ import numpy as np
 
 from repro.core.bucketing import bucket_size
 from repro.core.graph import JointGraph, skeleton_cache_key
-from repro.serve.estimator import CostEstimator
+from repro.serve.estimator import CostEstimator, NonFiniteEstimate
+from repro.serve.lifecycle import CircuitBreaker, fallback_scores
 from repro.serve.policy import DispatchPolicy
 
 # distinguishes "argument not passed" (fall back to the policy) from an
@@ -82,6 +83,29 @@ class ServiceOverloadError(RuntimeError):
     """A submit hit the bounded queue (``max_queue_depth``) with
     ``overflow="reject"``: the request was *not* enqueued.  Callers shed load
     (drop, retry with backoff, or degrade) instead of growing tail latency."""
+
+
+class EstimateTimeoutError(TimeoutError):
+    """A request's ``deadline_s`` expired before its drain finalized.
+
+    Enforced at drain-finalize: the answer (even a computed one) is replaced
+    by this error, because a placement decision made on a stale cost estimate
+    is worse than an honest timeout the caller can fall back from.  Counted
+    in ``ServiceStats.n_timeouts`` and fed to the circuit breaker (a
+    browning-out estimator times out before it fails)."""
+
+
+class _Degraded(dict):
+    """A score answer computed by the heuristic fallback scorer, not the
+    model.  A plain mapping to callers (same metric -> array shape), plus a
+    ``degraded`` marker and the estimator failure that caused it (None when
+    the breaker was already open and the estimator was never tried)."""
+
+    degraded = True
+
+    def __init__(self, values: Dict, cause: Optional[BaseException] = None):
+        super().__init__(values)
+        self.cause = cause
 
 
 @dataclass
@@ -107,6 +131,14 @@ class ServiceStats:
     max_drain: int = 0  # largest single drain
     queue_wait_s: float = 0.0  # total submit -> drain-pop time across requests
     max_queue_wait_s: float = 0.0  # worst single request's time in queue
+    # -- robustness counters (docs/robustness.md) --------------------------------
+    n_degraded: int = 0  # score answers served by the heuristic fallback scorer
+    n_nonfinite: int = 0  # estimator outputs rejected by the NaN/Inf guard
+    n_timeouts: int = 0  # answers replaced by EstimateTimeoutError at finalize
+    n_retries: int = 0  # estimator re-attempts after a transient failure
+    n_failed: int = 0  # requests delivered an exception (excl. bad requests)
+    n_swaps: int = 0  # bundle swaps applied (incl. rollbacks)
+    degraded: bool = False  # breaker not closed: answers may be fallback-based
 
     def reset(self) -> None:
         self.n_requests = self.n_batches = 0
@@ -114,6 +146,9 @@ class ServiceStats:
         self.n_drained = self.n_rejected = 0
         self.max_queue_depth = self.max_drain = 0
         self.queue_wait_s = self.max_queue_wait_s = 0.0
+        self.n_degraded = self.n_nonfinite = self.n_timeouts = 0
+        self.n_retries = self.n_failed = self.n_swaps = 0
+        self.degraded = False
 
 
 class _Request(NamedTuple):
@@ -122,6 +157,7 @@ class _Request(NamedTuple):
     payload: Tuple
     future: Future
     t_submit: float  # monotonic enqueue time (time-in-queue tracking)
+    deadline_s: Optional[float] = None  # answer-by budget from submit time
 
 
 class _LaunchedGroup(NamedTuple):
@@ -192,6 +228,7 @@ class PlacementService:
         warmup_cands: Optional[int] = None,
         max_merged_mixes=_UNSET,
         policy: Optional[DispatchPolicy] = None,
+        seed: int = 0,
     ):
         if overflow not in ("reject", "block"):
             raise ValueError(f"overflow must be 'reject' or 'block', got {overflow!r}")
@@ -230,6 +267,17 @@ class PlacementService:
         self._cond = threading.Condition()
         self._stopped = False
         self._thread: Optional[threading.Thread] = None
+        # -- robustness plumbing (docs/robustness.md) ----------------------------
+        # seeded rng for retry backoff jitter; touched only by the worker
+        self._rng = np.random.default_rng(seed)
+        self._retry = self.policy.retry_policy()
+        self._breaker = CircuitBreaker.from_policy(self.policy)
+        # a requested estimator swap awaiting the next drain boundary:
+        # (new estimator, future resolving to the replaced estimator)
+        self._pending_swap: Optional[Tuple[CostEstimator, Future]] = None
+        # observers fire on the worker thread after each finalized group
+        # (the BundleSwapper mirror and health window ride this seam)
+        self._observers: List[Callable] = []
         if auto_start:
             self.start()
 
@@ -282,12 +330,80 @@ class PlacementService:
                     r.future.set_exception(
                         RuntimeError("PlacementService worker died before serving this request")
                     )
+        # a swap the worker never applied resolves with an error — the
+        # requester must not hang on a future nobody will fulfill
+        with self._cond:
+            swap, self._pending_swap = self._pending_swap, None
+        if swap is not None and not swap[1].done():
+            swap[1].set_exception(RuntimeError("PlacementService closed before the swap applied"))
 
     def __enter__(self) -> "PlacementService":
         return self.start()
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    # -- bundle hot-swap + observation (docs/robustness.md) -----------------------
+
+    @property
+    def breaker(self) -> CircuitBreaker:
+        """The service's circuit breaker (read ``.state`` for health checks)."""
+        return self._breaker
+
+    def swap_bundle(self, candidate, wait: bool = True, timeout: Optional[float] = None):
+        """Atomically replace the serving estimator at the next drain boundary.
+
+        ``candidate`` is a ``CostEstimator`` or a ``CostModelBundle`` (wrapped
+        with this service's policy).  The swap quiesces between drains: groups
+        already launched hold the old estimator in their finalize closures and
+        finish on it; everything popped after the boundary routes to the new
+        one; the old estimator's instance caches are released when its last
+        in-flight group resolves.  Warm merged-mix admissions survive the swap
+        (they key on structures, not weights), and same-architecture swaps
+        reuse the module-level jit trace caches — a hot-swap costs zero
+        recompiles.
+
+        ``wait=True`` blocks until the boundary and returns the *replaced*
+        estimator (rollback keeps it alive); ``wait=False`` returns a
+        ``Future`` resolving to it — required when calling from a worker-side
+        observer (the rollback path), where blocking would deadlock the very
+        thread that applies swaps.  On a service whose worker is not running,
+        the swap applies immediately.  Raises ``RuntimeError`` on a closed
+        service or when another swap is still pending.
+        """
+        est = (
+            candidate
+            if isinstance(candidate, CostEstimator)
+            else CostEstimator.from_bundle(candidate, policy=self.policy)
+        )
+        fut: Future = Future()
+        with self._cond:
+            if self._stopped:
+                raise RuntimeError("PlacementService is closed")
+            if self._pending_swap is not None:
+                raise RuntimeError("a bundle swap is already pending")
+            if self._thread is None:
+                # no worker: there is no in-flight work to quiesce around
+                old, self.estimator = self.estimator, est
+                self.stats.n_swaps += 1
+                fut.set_result(old)
+                return fut.result() if wait else fut
+            self._pending_swap = (est, fut)
+            self._cond.notify_all()
+        return fut.result(timeout) if wait else fut
+
+    def add_observer(self, fn: Callable) -> None:
+        """Register ``fn(requests, answers)``, called on the worker thread
+        after each drain group's futures resolve (answers may be exceptions
+        or ``degraded``-marked fallback dicts).  Observer errors are
+        swallowed — observation must never fail a drain."""
+        with self._cond:
+            self._observers.append(fn)
+
+    def remove_observer(self, fn: Callable) -> None:
+        """Unregister an observer; raises ``ValueError`` if absent."""
+        with self._cond:
+            self._observers.remove(fn)
 
     # -- warmup -------------------------------------------------------------------
 
@@ -396,17 +512,29 @@ class PlacementService:
     def _resolve_metrics(self, metrics: Optional[Sequence[str]]) -> Tuple[str, ...]:
         return tuple(metrics) if metrics is not None else tuple(self.estimator.models)
 
+    @staticmethod
+    def _check_deadline(deadline_s: Optional[float]) -> Optional[float]:
+        if deadline_s is None:
+            return None
+        deadline_s = float(deadline_s)
+        if not deadline_s > 0:
+            raise ValueError(f"deadline_s must be positive, got {deadline_s}")
+        return deadline_s
+
     def submit_score(
         self,
         query,
         cluster,
         assignments: np.ndarray,
         metrics: Optional[Sequence[str]] = None,
+        deadline_s: Optional[float] = None,
     ) -> Future:
         """Async ``CostEstimator.score``; resolves to metric -> (N,) scores.
 
         Raises ``ServiceOverloadError`` (or blocks, per ``overflow``) when
-        the bounded queue is full."""
+        the bounded queue is full.  ``deadline_s`` is an answer-by budget
+        from submit time, enforced at drain-finalize: a late answer is
+        replaced by ``EstimateTimeoutError`` (docs/robustness.md#deadlines)."""
         metrics = self._resolve_metrics(metrics)
         a = np.asarray(assignments, dtype=np.int64)
         skel_key = skeleton_cache_key(query, cluster)
@@ -416,17 +544,20 @@ class PlacementService:
         return self._submit(
             _Request(
                 "score", key, (query, cluster, a, metrics, skel_key), Future(),
-                time.monotonic(),
+                time.monotonic(), self._check_deadline(deadline_s),
             )
         )
 
     def submit_estimate(
-        self, graphs: JointGraph, metrics: Optional[Sequence[str]] = None
+        self,
+        graphs: JointGraph,
+        metrics: Optional[Sequence[str]] = None,
+        deadline_s: Optional[float] = None,
     ) -> Future:
         """Async ``CostEstimator.estimate`` over a batched ``JointGraph``.
 
         Raises ``ServiceOverloadError`` (or blocks, per ``overflow``) when
-        the bounded queue is full."""
+        the bounded queue is full.  ``deadline_s`` as in ``submit_score``."""
         metrics = self._resolve_metrics(metrics)
         if not isinstance(graphs, JointGraph):
             graphs = self.estimator._as_graphs(graphs)
@@ -434,7 +565,10 @@ class PlacementService:
             graphs = jax.tree_util.tree_map(lambda x: np.asarray(x)[None], graphs)
         key = ("estimate", metrics)
         return self._submit(
-            _Request("estimate", key, (graphs, metrics), Future(), time.monotonic())
+            _Request(
+                "estimate", key, (graphs, metrics), Future(), time.monotonic(),
+                self._check_deadline(deadline_s),
+            )
         )
 
     def score(self, query, cluster, assignments, metrics=None) -> Dict[str, np.ndarray]:
@@ -461,8 +595,22 @@ class PlacementService:
         try:
             while True:
                 with self._cond:
-                    while not self._queue and not self._stopped and not pending:
+                    while (
+                        not self._queue
+                        and not self._stopped
+                        and not pending
+                        and self._pending_swap is None
+                    ):
                         self._cond.wait()
+                    # the drain boundary: an estimator swap applies here —
+                    # groups in `pending` hold the OLD estimator in their
+                    # finalize closures and finish on it; everything popped
+                    # from now on routes to the new one
+                    swap, self._pending_swap = self._pending_swap, None
+                    old_est = None
+                    if swap is not None:
+                        old_est, self.estimator = self.estimator, swap[0]
+                        self.stats.n_swaps += 1
                     batch = list(self._queue)
                     self._queue.clear()
                     stopped = self._stopped
@@ -478,6 +626,9 @@ class PlacementService:
                             if wait > self.stats.max_queue_wait_s:
                                 self.stats.max_queue_wait_s = wait
                         self._cond.notify_all()  # blocked submitters: depth dropped
+                if swap is not None:
+                    # resolve outside the lock: done-callbacks run inline
+                    swap[1].set_result(old_est)
                 launched = []
                 if batch:
                     groups: Dict[Tuple, List[_Request]] = {}  # dicts keep insertion order
@@ -496,8 +647,8 @@ class PlacementService:
                 batch, launched = [], []
                 if stopped and not pending:
                     with self._cond:
-                        if not self._queue:  # stopped and drained
-                            return
+                        if not self._queue and self._pending_swap is None:
+                            return  # stopped and drained
         except BaseException as e:  # pragma: no cover - worker skeleton bug
             # group-level failures are delivered per future and never reach
             # here; this is the backstop for a bug in the loop itself: fail
@@ -512,10 +663,13 @@ class PlacementService:
             with self._cond:
                 leftovers = list(self._queue)
                 self._queue.clear()
+                swap, self._pending_swap = self._pending_swap, None
                 self._cond.notify_all()
             for r in leftovers:
                 if not r.future.done():
                     r.future.set_exception(e)
+            if swap is not None and not swap[1].done():
+                swap[1].set_exception(e)
             raise
 
     def _launch_group(self, reqs: List[_Request]) -> _LaunchedGroup:
@@ -535,6 +689,16 @@ class PlacementService:
             answers, n_forwards, n_cross = lg.finalize()
         except BaseException as e:  # deliver, don't kill the worker
             answers, n_forwards, n_cross = [e] * len(lg.reqs), 0, 0
+        answers = list(answers)
+        # deadlines are judged where the answer materializes: an estimate
+        # that finished after the caller's budget is replaced, not delivered
+        now = time.monotonic()
+        for j, r in enumerate(lg.reqs):
+            if r.deadline_s is not None and (now - r.t_submit) > r.deadline_s:
+                answers[j] = EstimateTimeoutError(
+                    f"{r.kind} answered in {now - r.t_submit:.3f}s, "
+                    f"over its {r.deadline_s:.3f}s deadline"
+                )
         # count the work before resolving futures, so a caller woken by
         # result() never observes counters lagging its own answer
         with self._cond:
@@ -542,6 +706,31 @@ class PlacementService:
             self.stats.n_cross_query += n_cross
             if len(lg.reqs) > 1:
                 self.stats.n_coalesced += len(lg.reqs)
+            for answer in answers:
+                if isinstance(answer, _Degraded):
+                    self.stats.n_degraded += 1
+                    if isinstance(answer.cause, NonFiniteEstimate):
+                        self.stats.n_nonfinite += 1
+                    if answer.cause is not None:
+                        # a real estimator failure behind the fallback; a
+                        # causeless _Degraded is the breaker's own
+                        # short-circuit and must not re-feed it
+                        self._breaker.record_failure()
+                elif isinstance(answer, EstimateTimeoutError):
+                    self.stats.n_timeouts += 1
+                    self._breaker.record_failure()
+                elif isinstance(answer, NonFiniteEstimate):
+                    self.stats.n_nonfinite += 1
+                    self.stats.n_failed += 1
+                    self._breaker.record_failure()
+                elif isinstance(answer, ValueError):
+                    pass  # caller error, says nothing about estimator health
+                elif isinstance(answer, BaseException):
+                    self.stats.n_failed += 1
+                    self._breaker.record_failure()
+                else:
+                    self._breaker.record_success()
+            self.stats.degraded = self._breaker.state != "closed"
         # a per-request answer may be an exception (bad request, failed
         # subgroup): metrics-tuple groups span unrelated callers, so one
         # request's failure must never fail its batchmates
@@ -550,6 +739,11 @@ class PlacementService:
                 r.future.set_exception(answer)
             else:
                 r.future.set_result(answer)
+        for obs in list(self._observers):
+            try:
+                obs(lg.reqs, answers)
+            except Exception:
+                pass  # observers are best-effort, never worker-fatal
 
     def _launch_scores(self, reqs: List[_Request]) -> Callable:
         metrics = reqs[0].payload[3]
@@ -561,6 +755,19 @@ class PlacementService:
                 answers[i] = ValueError("no candidates to score")
             else:
                 live.append(i)
+        if live and not self._breaker.allow():
+            # circuit open: serve heuristic-placement fallback scores without
+            # touching the estimator at all; answers are tagged degraded so
+            # callers (and ServiceStats) can tell
+
+            def finalize():
+                for i in live:
+                    q, c, a, ms, _ = reqs[i].payload
+                    answers[i] = self._degraded_answer(q, c, a, ms, cause=None)
+                return answers, 0, 0
+
+            return finalize
+
         distinct = {reqs[i].payload[4] for i in live}
         rows_per_structure = (
             sum(len(reqs[i].payload[2]) for i in live) / len(distinct) if live else 0.0
@@ -590,8 +797,28 @@ class PlacementService:
             n_forwards = -(-total // self.max_batch)
             n_cross = len(live)
 
+            est = self.estimator  # finalize must use the estimator that launched
+
             def finalize():
-                for i, ans in zip(live, pending.result()):
+                try:
+                    results = pending.result()
+                except BaseException as e:
+                    try:
+                        results = self._retry_call(
+                            lambda: est.score_many(
+                                items,
+                                metrics,
+                                max_rows=self.max_batch,
+                                keys=[reqs[i].payload[4] for i in live],
+                            ),
+                            e,
+                        )
+                    except BaseException as final:
+                        for i in live:
+                            q, c, a, ms, _ = reqs[i].payload
+                            answers[i] = self._degraded_answer(q, c, a, ms, cause=final)
+                        return answers, n_forwards, n_cross
+                for i, ans in zip(live, results):
                     answers[i] = ans
                 return answers, n_forwards, n_cross
 
@@ -605,7 +832,8 @@ class PlacementService:
         for i in live:
             subgroups.setdefault(reqs[i].payload[4], []).append(i)
         n_forwards = 0
-        launched_subs: List[Tuple[List[int], List[int], Optional[List], Optional[BaseException]]] = []
+        est = self.estimator  # finalize must use the estimator that launched
+        launched_subs: List[Tuple] = []
         for idxs in subgroups.values():
             query, cluster, _, _, _ = reqs[idxs[0]].payload
             mats = [reqs[i].payload[2] for i in idxs]
@@ -621,22 +849,38 @@ class PlacementService:
                         )
                     )
                     n_forwards += 1
-                launched_subs.append((idxs, sizes, parts, None))
+                launched_subs.append((idxs, sizes, parts, None, query, cluster, merged_mat))
             except BaseException as e:
-                launched_subs.append((idxs, sizes, None, e))
+                launched_subs.append((idxs, sizes, None, e, query, cluster, merged_mat))
+
+        def retry_sub(query, cluster, merged_mat, first_err):
+            def attempt():
+                done = []
+                for s in range(0, len(merged_mat), self.max_batch):
+                    done.append(
+                        est.score(query, cluster, merged_mat[s : s + self.max_batch], metrics)
+                    )
+                return {m: np.concatenate([d[m] for d in done]) for m in metrics}
+
+            return self._retry_call(attempt, first_err)
 
         def finalize():
-            for idxs, sizes, parts, err in launched_subs:
+            for idxs, sizes, parts, err, query, cluster, merged_mat in launched_subs:
+                joined = None
                 if err is None:
                     try:
                         done = [p.result() for p in parts]
                         joined = {m: np.concatenate([d[m] for d in done]) for m in metrics}
                     except BaseException as e:
                         err = e
-                if err is not None:
-                    for i in idxs:
-                        answers[i] = err
-                    continue
+                if joined is None:
+                    try:
+                        joined = retry_sub(query, cluster, merged_mat, err)
+                    except BaseException as final:
+                        for i in idxs:
+                            q, c, a, ms, _ = reqs[i].payload
+                            answers[i] = self._degraded_answer(q, c, a, ms, cause=final)
+                        continue
                 off = 0
                 for i, size in zip(idxs, sizes):
                     answers[i] = {m: joined[m][off : off + size] for m in metrics}
@@ -664,4 +908,64 @@ class PlacementService:
             n_forwards = -(-total // self.max_batch)
         else:
             n_forwards = sum(-(-n // self.max_batch) for n in sizes if n)
-        return lambda: (pending.result(), n_forwards, 0)
+        est = self.estimator  # finalize must use the estimator that launched
+
+        def finalize():
+            try:
+                results = pending.result()
+            except BaseException as e:
+                # estimates have no heuristic fallback: retry transients, then
+                # deliver the error to the callers
+                results = self._retry_call(
+                    lambda: est.estimate_many(graphs, metrics, max_rows=self.max_batch),
+                    e,
+                )
+            return results, n_forwards, 0
+
+        return finalize
+
+    # -- failure handling -------------------------------------------------
+
+    @staticmethod
+    def _transient(e: BaseException) -> bool:
+        # caller errors and typed verdicts won't change on a second try;
+        # everything else (backend hiccups, injected faults) may
+        return isinstance(e, Exception) and not isinstance(
+            e, (ValueError, NonFiniteEstimate, EstimateTimeoutError, ServiceOverloadError)
+        )
+
+    def _retry_call(self, fn: Callable, first_err: BaseException):
+        """Re-run ``fn`` under the policy's RetryPolicy after ``first_err``.
+
+        Raises the last error if every attempt fails or the error is not
+        transient.  Sleeps are seeded-jittered exponential backoff, so a
+        given service seed replays the same schedule.
+        """
+        if not self._transient(first_err):
+            raise first_err
+        last = first_err
+        for attempt in range(1, self._retry.max_attempts):
+            with self._cond:
+                self.stats.n_retries += 1
+            time.sleep(self._retry.sleep_s(attempt, float(self._rng.random())))
+            try:
+                return fn()
+            except BaseException as e:
+                last = e
+                if not self._transient(e):
+                    raise
+        raise last
+
+    def _degraded_answer(self, query, cluster, assignments, metrics, cause):
+        """Heuristic-placement fallback scores, tagged ``degraded=True``.
+
+        Used when the breaker is open (``cause=None``) or when the estimator
+        failed past its retry budget (``cause`` = the final error).  If even
+        the model-free fallback fails, the original cause is delivered.
+        """
+        try:
+            return _Degraded(
+                fallback_scores(query, cluster, assignments, metrics), cause=cause
+            )
+        except Exception as e:
+            return cause if cause is not None else e

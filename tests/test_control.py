@@ -322,3 +322,51 @@ def test_controller_estimator_smoke(tiny_estimator):
     # warm/cold replay must match: the estimator's caches must not leak into
     # decisions
     assert run_once() == run_once()
+
+
+# -- degraded mode: estimator brown-out defers soft re-plans -----------------------
+
+
+def test_degraded_defers_drift_replan_until_recovery():
+    """While the degraded probe reports a brown-out the controller still
+    observes drift alarms but refuses to migrate on them (the scores behind
+    them are heuristic fallbacks); when the probe clears, the standing drift
+    triggers the deferred move on the next tick."""
+    fleet, cluster, events = _isolation_scenario()
+    flag = {"on": True}
+    ctl = _controller(
+        FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0),
+        degraded=lambda: flag["on"],
+    )
+    for _ in range(8):
+        rec = ctl.step()
+        assert rec.degraded
+        assert not rec.decisions, "soft drift must not re-plan while degraded"
+    assert any(a.kind == "drift" for r in ctl.records for a in r.alarms), (
+        "alarms stay visible during the brown-out; only the re-plan is deferred"
+    )
+    flag["on"] = False
+    moved = False
+    for _ in range(8):
+        rec = ctl.step()
+        assert not rec.degraded
+        moved = moved or any(d.action == "migrate" for d in rec.decisions)
+    assert moved, "recovery must release the deferred re-plan"
+
+
+def test_degraded_still_replaces_orphans():
+    """Hard events bypass the brown-out deferral: an orphaned query is
+    re-homed immediately even while every tick is flagged degraded."""
+    qs = _corpus()
+    cluster = Cluster([_host(0), _host(1), _host(2, cpu=300, ram=8000)])
+    fleet = [_pin(qs[4], 2), _pin(qs[6], 1)]
+    events = [ScenarioEvent(tick=4, kind="fail", host=2)]
+    ctl = _controller(
+        FleetRuntime(fleet, cluster, events, seed=5, tick_s=30.0),
+        degraded=lambda: True,
+    )
+    rep = ctl.run(10)
+    assert all(r.degraded for r in rep.records)
+    tick5 = [d for d in rep.decision_log() if d["tick"] == 5 and d["query_id"] == 0]
+    assert tick5 and tick5[0]["action"] in ("migrate", "accept")
+    assert ctl.runtime.orphans(0) == ()

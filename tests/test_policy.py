@@ -4,6 +4,7 @@ predictions).  Methodology reference: docs/dispatch.md."""
 
 import json
 import os
+import warnings
 
 import jax
 import numpy as np
@@ -103,17 +104,34 @@ def test_foreign_host_profile_falls_back_to_defaults(tmp_path, monkeypatch):
     assert resolve_policy().cross_query_row_limit == 1
 
 
-def test_corrupt_or_stale_profiles_return_none(tmp_path):
+def test_corrupt_or_stale_profiles_return_none_with_warning(tmp_path):
+    """Unusable profiles fall back to builtins (None) AND warn once with the
+    path + reason — an operator must be able to tell a tuned host from a
+    silently-defaulted one.  A missing profile is the normal un-tuned state
+    and stays silent."""
+    from repro.serve import DispatchProfileWarning
+
     bad = tmp_path / "bad.json"
     bad.write_text("{not json")
-    assert load_profile(bad) is None
+    with pytest.warns(DispatchProfileWarning, match=str(bad)):
+        assert load_profile(bad) is None
     stale = tmp_path / "stale.json"
     save_profile(stale, DispatchPolicy())
     payload = json.loads(stale.read_text())
     payload["schema_version"] = PROFILE_SCHEMA_VERSION + 1
     stale.write_text(json.dumps(payload))
-    assert load_profile(stale) is None
-    assert load_profile(tmp_path / "missing.json") is None
+    with pytest.warns(DispatchProfileWarning, match="schema"):
+        assert load_profile(stale) is None
+    invalid = tmp_path / "invalid.json"
+    save_profile(invalid, DispatchPolicy())
+    payload = json.loads(invalid.read_text())
+    payload["policy"]["max_batch"] = -1
+    invalid.write_text(json.dumps(payload))
+    with pytest.warns(DispatchProfileWarning, match=str(invalid)):
+        assert load_profile(invalid) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # missing file: silent None
+        assert load_profile(tmp_path / "missing.json") is None
 
 
 def test_env_override_semantics(tmp_path, monkeypatch):

@@ -374,6 +374,44 @@ def test_from_bundle_warns_on_corpus_fingerprint_mismatch():
         CostEstimator.from_bundle(bundle, corpus_fingerprint=corpus_fingerprint(traces[:5]))
 
 
+def test_from_bundle_strict_provenance_raises():
+    """strict_provenance=True turns the provenance-mismatch warning into a
+    typed BundleVersionError — deployment pipelines opt in to refusing a
+    model trained on the wrong corpus instead of serving it with a warning."""
+    from repro.serve import BundleVersionError, corpus_fingerprint
+
+    traces = WorkloadGenerator(seed=61).corpus(6)
+    fp = corpus_fingerprint(traces)
+    bundle = CostModelBundle(_models(metrics=("latency_p",)), meta={"corpus_fingerprint": fp})
+    with pytest.raises(BundleVersionError, match="provenance mismatch"):
+        CostEstimator.from_bundle(
+            bundle,
+            corpus_fingerprint=corpus_fingerprint(traces[:5]),
+            strict_provenance=True,
+        )
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # agreeing fingerprints: strict stays silent
+        CostEstimator.from_bundle(bundle, corpus_fingerprint=fp, strict_provenance=True)
+
+
+def test_bundle_load_verify_rejects_corrupt_arrays(tmp_path):
+    """load(verify=True) must read every metric's npz params up front and
+    wrap corruption in BundleIntegrityError at load time — not at first use
+    mid-drain (the lazy default defers exactly that discovery)."""
+    from repro.serve import BundleIntegrityError
+    from repro.serve.chaos import corrupt_bundle
+
+    bundle = CostModelBundle(_models(metrics=("latency_p",)), meta={"note": "verify"})
+    d = str(tmp_path / "verify")
+    bundle.save(d)
+    CostModelBundle.load(d, verify=True)  # pristine: verification passes
+    corrupt_bundle(d, seed=3)
+    loaded = CostModelBundle.load(d)  # lazy default: corruption undetected
+    assert loaded.metrics == ("latency_p",)
+    with pytest.raises(BundleIntegrityError, match="failed verification"):
+        CostModelBundle.load(d, verify=True)
+
+
 # -- 0.7 shim removal ------------------------------------------------------------
 
 
